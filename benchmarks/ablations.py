@@ -1,0 +1,75 @@
+"""Ablations on the paper's knobs (beyond-paper quantification):
+
+* virtual-loss weight — decorrelation vs pessimism trade-off (dup rate +
+  strength at fixed budget/lanes);
+* in-flight concurrency (lanes) at fixed budget — staleness growth, the ILD
+  compromise dial of §V-A;
+* MoE capacity factor — dropped-token fraction vs parity with the dropless
+  dispatch (substrate knob exercised by deepseek/grok cells).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.domains.pgame import PGameDomain, optimal_root_action
+from repro.core.metrics import strength
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.stages import SearchParams
+from repro.core.tree import root_action_by_visits
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=5)
+BUDGET = 256
+SEEDS = 10
+
+
+def _strength_dup(sp, lanes):
+    cfg = PipelineConfig(budget=BUDGET, lanes=lanes, params=sp)
+    f = jax.jit(lambda r: (root_action_by_visits(run_pipeline(DOM, cfg, r)[0]),
+                           run_pipeline(DOM, cfg, r)[1]["duplicates"]))
+    acts, dups = [], []
+    for s in range(SEEDS):
+        a, d = f(jax.random.key(s))
+        acts.append(int(a))
+        dups.append(int(d))
+    return strength(acts, optimal_root_action(DOM)), float(np.mean(dups)) / BUDGET
+
+
+def run(report):
+    # virtual-loss weight ablation at lanes=8
+    for vlw in (0.0, 0.5, 1.0, 3.0):
+        t0 = time.perf_counter()
+        st, dup = _strength_dup(SearchParams(cp=0.7, max_depth=6,
+                                             vl_weight=vlw), 8)
+        report(f"ablate_vl_weight_{vlw}", (time.perf_counter() - t0) * 1e6,
+               f"strength={st:.2f} dup_rate={dup:.3f}")
+
+    # in-flight concurrency (the ILD staleness dial)
+    for lanes in (1, 4, 16, 32):
+        t0 = time.perf_counter()
+        st, dup = _strength_dup(SearchParams(cp=0.7, max_depth=6), lanes)
+        report(f"ablate_inflight_lanes{lanes}", (time.perf_counter() - t0) * 1e6,
+               f"strength={st:.2f} dup_rate={dup:.3f} in_flight={4 * lanes}")
+
+    # MoE capacity factor: drop fraction + parity vs dropless dispatch
+    from repro.models.base import ModelConfig
+    from repro.models import moe as M
+    cfg0 = ModelConfig(name="ab", family="moe", n_layers=1, d_model=32,
+                       n_heads=4, d_ff=0, vocab_size=64, dtype="float32",
+                       n_experts=8, moe_topk=2, d_ff_expert=16, moe_groups=2)
+    p = M.init_moe_ffn(cfg0, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (256, 32))
+    y_dropless = M.moe_ffn(cfg0.replace(moe_impl="ragged"), p, x)[0]
+    for cap in (1.0, 1.25, 2.0, 8.0):
+        cfg = cfg0.replace(moe_capacity=cap)
+        t0 = time.perf_counter()
+        y = M.moe_ffn(cfg, p, x)[0]
+        us = (time.perf_counter() - t0) * 1e6
+        # rows that came back all-zero from the routed experts were dropped
+        diff = float(jnp.abs(y - y_dropless).max())
+        changed = float((jnp.abs(y - y_dropless).max(-1) > 1e-6).mean())
+        report(f"ablate_moe_capacity_{cap}", us,
+               f"affected_token_frac={changed:.3f} max_diff={diff:.3f}")

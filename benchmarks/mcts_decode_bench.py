@@ -1,0 +1,37 @@
+"""MCTS-LM decode throughput (the paper's technique as a serving feature):
+playouts/s of the pipelined search over a tiny LM evaluator, lanes sweep —
+the modern instantiation where Playout = NN evaluation (DESIGN.md §2)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.domains.lm_decode import LMDecodeDomain
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.stages import SearchParams
+from repro.models.base import ModelConfig, get_family
+
+CFG = ModelConfig(name="bench-lm", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                  dtype="float32", ce_chunk=16, remat=False)
+BUDGET = 48
+
+
+def run(report):
+    fam = get_family(CFG)
+    params = fam.init(CFG, jax.random.key(0))
+    dom = LMDecodeDomain(cfg=CFG, params=params,
+                         prompt=jnp.array([1, 2, 3, 4], jnp.int32),
+                         num_actions=4, search_depth=6, rollout_len=3)
+    sp = SearchParams(cp=1.0, max_depth=6, puct=True)
+    for lanes in (1, 2, 4, 8):
+        cfg = PipelineConfig(budget=BUDGET, lanes=lanes, params=sp)
+        f = jax.jit(lambda r: run_pipeline(dom, cfg, r)[0]["visits"])
+        f(jax.random.key(0))
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(jax.random.key(1)))
+        dt = time.perf_counter() - t0
+        report(f"mcts_lm_decode_lanes{lanes}", dt * 1e6,
+               f"playouts_per_s={BUDGET / dt:,.1f}")

@@ -1,0 +1,38 @@
+"""Paper Figs. 3/4/6: pipeline scheduling makespans + steady-state throughput.
+
+Columns: name, value, derived (expected-from-paper where applicable).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import schedule
+
+
+def run(report):
+    cases = [
+        ("fig3_linear_equal_4traj", (4, (1, 1, 1, 1), 1), 7.0),
+        ("fig4_unequal_playout2x_4traj", (4, (1, 1, 2, 1), 1), 11.0),
+        ("fig6_nonlinear_2lanes_4traj", (4, (1, 1, 2, 1), 2), 8.0),
+        ("sequential_4traj", None, 16.0),
+    ]
+    for name, args, expected in cases:
+        t0 = time.perf_counter()
+        if args is None:
+            val = schedule.sequential_makespan(4)
+        else:
+            val = schedule.pipeline_makespan(*args)
+        us = (time.perf_counter() - t0) * 1e6
+        report(name, us, f"makespan={val}T expected={expected}T "
+                         f"match={abs(val - expected) < 1e-9}")
+    # steady-state throughput scaling with lanes (paper §V-C)
+    for lanes in (1, 2, 4, 8):
+        thr = schedule.steady_state_throughput((1, 1, 4, 1), lanes)
+        report(f"steady_state_throughput_lanes{lanes}", 0.0,
+               f"traj_per_T={thr:.3f} (playout=4T)")
+    # occupancy fill/drain trace summary
+    grid, busy = schedule.occupancy_trace(16, (1, 1, 2, 1), lanes=2)
+    full = busy.max()
+    frac = (busy >= full * 0.99).mean()
+    report("occupancy_16traj_2lanes", 0.0,
+           f"peak_busy_PEs={full:.0f} frac_time_at_peak={frac:.2f}")

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper artifact (see DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only <module>]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "pipeline_schedule",     # Figs 3/4/6 + steady-state throughput
+    "playout_speedup",       # §II def. 1
+    "strength_speedup",      # §II def. 2 + §IV baselines
+    "search_overhead",       # §III-B
+    "mcts_decode_bench",     # modern instantiation (NN playouts)
+    "straggler_bench",       # runtime policy
+    "kernel_bench",          # per-kernel micro numbers
+    "ablations",             # vl-weight / in-flight / MoE-capacity knobs
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    failed = []
+    for m in mods:
+        try:
+            mod = importlib.import_module(f"benchmarks.{m}")
+            mod.run(report)
+        except Exception as e:
+            failed.append(m)
+            print(f"{m},-1,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

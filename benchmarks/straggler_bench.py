@@ -1,0 +1,19 @@
+"""Straggler mitigation: throughput vs drop-rate for the playout-lane
+deadline policy under heavy-tailed lane latencies (runtime/straggler.py)."""
+from __future__ import annotations
+
+import time
+
+from repro.runtime.straggler import StragglerPolicy, simulate_throughput
+
+
+def run(report):
+    for df in (2.0, 3.0, 5.0, 1e9):
+        t0 = time.perf_counter()
+        out = simulate_throughput(StragglerPolicy(deadline_factor=df),
+                                  lanes=32, waves=400, tail=0.12)
+        us = (time.perf_counter() - t0) * 1e6
+        tag = "no_deadline" if df > 1e6 else f"deadline_{df}x"
+        report(f"straggler_{tag}", us,
+               f"speedup={out['speedup']:.2f}x drop_rate={out['drop_rate']:.3f} "
+               f"throughput={out['throughput']:.2f}/T")

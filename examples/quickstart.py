@@ -1,0 +1,42 @@
+"""Quickstart: pipelined MCTS on a synthetic P-game tree.
+
+Runs the paper's linear pipeline (lanes=1) and nonlinear pipeline (lanes=8)
+against the sequential baseline at equal budget, and prints strength vs the
+exact enumeration oracle plus the in-flight duplicate rate (search overhead).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.domains.pgame import PGameDomain, enumerate_root_values, optimal_root_action
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.sequential import run_sequential
+from repro.core.stages import SearchParams
+from repro.core.tree import root_action_by_visits
+
+
+def main():
+    dom = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
+    print("exact root values:", [f"{v:.3f}" for v in enumerate_root_values(dom)])
+    opt = optimal_root_action(dom)
+    print(f"optimal root action: {opt}\n")
+
+    sp = SearchParams(cp=0.7, max_depth=6)
+    budget = 256
+
+    tree, _ = jax.jit(lambda r: run_sequential(dom, sp, budget, r))(jax.random.key(0))
+    print(f"sequential      : action={int(root_action_by_visits(tree))} "
+          f"(budget {budget})")
+
+    for lanes in (1, 8):
+        cfg = PipelineConfig(budget=budget, lanes=lanes, params=sp)
+        tree, stats = jax.jit(lambda r: run_pipeline(dom, cfg, r))(jax.random.key(0))
+        kind = "linear   " if lanes == 1 else "nonlinear"
+        print(f"pipeline {kind}: action={int(root_action_by_visits(tree))} "
+              f"playouts={int(stats['playouts'])} "
+              f"duplicates={int(stats['duplicates'])} "
+              f"occupancy={float(stats['mean_occupancy']):.2f}")
+
+
+if __name__ == "__main__":
+    main()

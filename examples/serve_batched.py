@@ -1,0 +1,18 @@
+"""Continuous-batching serving example: a pool of requests streams through
+the engine's prefill/decode interleave at fixed decode batch.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import subprocess
+import sys
+
+
+def main():
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "qwen2-0.5b", "--smoke",
+           "--requests", "10", "--max-new", "12", "--max-batch", "4"]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

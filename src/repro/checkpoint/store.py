@@ -1,0 +1,159 @@
+"""Sharded, async, atomic checkpointing with elastic restore.
+
+Layout:  <dir>/step_<N>/{manifest.json, leaf_<i>.npy..., COMMITTED}
+
+* save is atomic: leaves + manifest land in a tmp dir, then a single rename +
+  COMMITTED marker; a crash mid-save never corrupts the latest checkpoint;
+* async: the device->host transfer happens on the caller thread (cheap), the
+  file writes on a background thread; ``wait()`` joins before the next save;
+* elastic restore: leaves are re-sharded to whatever mesh/sharding the
+  restoring job passes (``jax.device_put`` with the new sharding), so a job
+  restarted at a different world size resumes from the same step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+COMMITTED = "COMMITTED"
+
+# numpy can't serialize bfloat16 natively; round-trip via a same-width view
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_savable(arr: np.ndarray):
+    name = arr.dtype.name if hasattr(arr.dtype, "name") else str(arr.dtype)
+    if name in _VIEW_AS:
+        return arr.view(_VIEW_AS[name]), name
+    return arr, name
+
+
+def _from_savable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_AS:
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _leaf_paths(d: str, n: int):
+    return [os.path.join(d, f"leaf_{i}.npy") for i in range(n)]
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, asynchronous: bool = False,
+         keep: int = 3) -> Optional[threading.Thread]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    host_leaves = [np.asarray(x) for x in leaves]    # device -> host now
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+
+    def _write():
+        os.makedirs(tmp_dir, exist_ok=True)
+        dtype_names = []
+        for p, arr in zip(_leaf_paths(tmp_dir, len(host_leaves)), host_leaves):
+            savable, name = _to_savable(arr)
+            dtype_names.append(name)
+            np.save(p, savable)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(host_leaves),
+            "shapes": [list(a.shape) for a in host_leaves],
+            "dtypes": dtype_names,
+        }
+        with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(step_dir):
+            shutil.rmtree(step_dir)
+        os.rename(tmp_dir, step_dir)
+        with open(os.path.join(step_dir, COMMITTED), "w") as f:
+            f.write("ok")
+        _gc(ckpt_dir, keep)
+
+    if asynchronous:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(_committed_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def _committed_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, COMMITTED)):
+                out.append(int(name[5:]))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _committed_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optionally reshard each leaf
+    onto ``shardings`` (elastic restart at a different mesh)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(step_dir, COMMITTED)):
+        raise FileNotFoundError(f"no committed checkpoint at {step_dir}")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = [_from_savable(np.load(p), dt) for p, dt in
+              zip(_leaf_paths(step_dir, len(leaves)), manifest["dtypes"])]
+    for a, l in zip(arrays, leaves):
+        if tuple(a.shape) != tuple(l.shape):
+            raise ValueError(f"shape mismatch {a.shape} vs {l.shape}")
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(shardings)
+        arrays = [jax.device_put(a, s) for a, s in zip(arrays, shard_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+class CheckpointManager:
+    """Keeps at most one async save in flight; joins before the next one."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, every: int = 100):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.every = every
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def maybe_save(self, step: int, tree: Any) -> bool:
+        if step % self.every:
+            return False
+        self.wait()
+        self._pending = save(self.dir, step, tree, asynchronous=True,
+                             keep=self.keep)
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.dir)
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = self.latest()
+        if step is None:
+            return None, None
+        return step, restore(self.dir, step, like, shardings)

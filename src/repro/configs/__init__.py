@@ -1,0 +1,40 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch)`` -> full ModelConfig (exact published dims);
+``get_smoke_config(arch)`` -> reduced same-family config for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.base import ModelConfig
+
+ARCHS: List[str] = [
+    "deepseek-v2-lite-16b",
+    "grok-1-314b",
+    "smollm-135m",
+    "qwen2-0.5b",
+    "minicpm-2b",
+    "stablelm-3b",
+    "whisper-base",
+    "rwkv6-1.6b",
+    "zamba2-1.2b",
+    "internvl2-2b",
+]
+
+_MODULES: Dict[str, str] = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _mod(arch).SMOKE_CONFIG

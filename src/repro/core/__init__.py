@@ -1,0 +1,4 @@
+from repro.core.pipeline import PipelineConfig, run_pipeline  # noqa: F401
+from repro.core.sequential import run_sequential  # noqa: F401
+from repro.core.stages import SearchParams  # noqa: F401
+from repro.core.tree import init_tree, root_action_by_visits  # noqa: F401

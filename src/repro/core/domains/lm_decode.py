@@ -1,0 +1,83 @@
+"""MCTS-guided LM decoding domain — the modern instantiation of the paper's
+Playout stage (NN evaluation dominates; see DESIGN.md §2 assumption 1).
+
+State = token buffer + length.  Actions = the top-A next tokens under the
+policy LM.  Playout = greedy rollout of ``rollout_len`` tokens; reward =
+exp(mean logprob) in (0, 1].  Priors = renormalized top-A policy probs (PUCT).
+
+This generic (uncached) domain re-evaluates the prefix per call — correct and
+simple, used by core tests and examples.  The production serving path
+(repro.serving.mcts_decode) batches playouts across lanes, which is exactly
+the paper's parallel-playout-stage load balancing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, get_family
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDecodeDomain:
+    cfg: ModelConfig
+    params: Any
+    prompt: Any                       # [prompt_len] int32
+    num_actions: int = 4
+    search_depth: int = 8             # max new tokens explored by the tree
+    rollout_len: int = 4
+    temperature: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "_fam", get_family(self.cfg))
+
+    @property
+    def max_len(self) -> int:
+        return int(self.prompt.shape[0]) + self.search_depth + self.rollout_len
+
+    def root_state(self):
+        toks = jnp.zeros((self.max_len,), jnp.int32)
+        toks = jax.lax.dynamic_update_slice(toks, self.prompt.astype(jnp.int32), (0,))
+        return {"toks": toks, "len": jnp.int32(self.prompt.shape[0])}
+
+    # -- internals ----------------------------------------------------------
+    def _last_logits(self, toks, ln):
+        logits = self._fam.logits_fn(self.cfg, self.params, toks[None])
+        return logits[0, ln - 1].astype(jnp.float32) / self.temperature
+
+    def _topk(self, state):
+        logits = self._last_logits(state["toks"], state["len"])
+        return jax.lax.top_k(logits, self.num_actions)
+
+    # -- domain API ----------------------------------------------------------
+    def step(self, state, action):
+        _, top_toks = self._topk(state)
+        tok = top_toks[action]
+        toks = state["toks"].at[state["len"]].set(tok.astype(jnp.int32), mode="drop")
+        return {"toks": toks, "len": state["len"] + 1}
+
+    def is_terminal(self, state):
+        return state["len"] >= self.prompt.shape[0] + self.search_depth
+
+    def playout(self, state, rng):
+        """Greedy rollout; reward = exp(mean next-token logprob)."""
+        def body(c, _):
+            toks, ln, acc = c
+            logits = self._last_logits(toks, ln)
+            logp = jax.nn.log_softmax(logits)
+            tok = jnp.argmax(logits).astype(jnp.int32)
+            acc = acc + logp[tok]
+            toks = toks.at[ln].set(tok, mode="drop")
+            return (toks, ln + 1, acc), None
+
+        (_, _, acc), _ = jax.lax.scan(
+            body, (state["toks"], state["len"], jnp.float32(0.0)),
+            None, length=self.rollout_len)
+        return jnp.exp(acc / self.rollout_len)
+
+    def priors(self, state):
+        top_vals, _ = self._topk(state)
+        return jax.nn.softmax(top_vals)

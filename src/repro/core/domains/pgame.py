@@ -1,0 +1,106 @@
+"""Synthetic P-game trees — the standard domain for UCT scalability studies
+(Kocsis & Szepesvári; Segal "On the Scalability of Parallel UCT").
+
+A uniform tree of branching ``num_actions`` and depth ``game_depth``; each
+edge carries a pseudo-random value in [0,1] derived from a 32-bit path hash.
+Terminal reward = (binary) path sum exceeding a threshold, or (smooth) the
+normalized path sum.  Ground-truth optimal root actions are enumerable on the
+host for small trees (``enumerate_root_values``), giving an exact strength
+metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FNV = np.uint32(16777619)
+MIX = np.uint32(2654435761)
+
+
+def _hash_step(h, a):
+    return ((h ^ (a.astype(jnp.uint32) + 1)) * FNV).astype(jnp.uint32)
+
+
+def _edge_value(h):
+    return (h * MIX).astype(jnp.uint32).astype(jnp.float32) / jnp.float32(2 ** 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class PGameDomain:
+    num_actions: int = 4
+    game_depth: int = 8
+    threshold: float = 0.5
+    binary_reward: bool = True
+    seed: int = 0
+
+    def root_state(self):
+        return {"hash": jnp.uint32(np.uint32(2166136261) ^ np.uint32(self.seed)),
+                "depth": jnp.int32(0), "accum": jnp.float32(0.0)}
+
+    def step(self, state, action):
+        h = _hash_step(state["hash"], action)
+        return {"hash": h, "depth": state["depth"] + 1,
+                "accum": state["accum"] + _edge_value(h)}
+
+    def is_terminal(self, state):
+        return state["depth"] >= self.game_depth
+
+    def playout(self, state, rng):
+        """Uniform-random rollout to terminal; reward in [0, 1]."""
+        def body(i, c):
+            h, d, acc, r = c
+            r, sub = jax.random.split(r)
+            a = jax.random.randint(sub, (), 0, self.num_actions)
+            do = i >= d            # rollout covers levels [depth, game_depth)
+            h2 = _hash_step(h, a)
+            acc2 = acc + _edge_value(h2)
+            h = jnp.where(do, h2, h)
+            acc = jnp.where(do, acc2, acc)
+            return (h, d, acc, r)
+
+        h, d, acc, _ = jax.lax.fori_loop(
+            0, self.game_depth, body,
+            (state["hash"], state["depth"], state["accum"], rng))
+        total = acc / self.game_depth
+        if self.binary_reward:
+            return (total > self.threshold).astype(jnp.float32)
+        return jnp.clip(total, 0.0, 1.0)
+
+    def priors(self, state):
+        return jnp.full((self.num_actions,), 1.0 / self.num_actions, jnp.float32)
+
+
+def enumerate_root_values(domain: PGameDomain) -> np.ndarray:
+    """Exact E[reward | root action, uniform play] per action (host, numpy).
+
+    Feasible for num_actions**game_depth up to a few million.
+    """
+    a, d = domain.num_actions, domain.game_depth
+    h0 = np.uint32(2166136261) ^ np.uint32(domain.seed)
+    hashes = np.array([h0], dtype=np.uint32)
+    accums = np.array([0.0], dtype=np.float64)
+    first_action = np.zeros(1, dtype=np.int64)
+    for level in range(d):
+        acts = np.arange(a, dtype=np.uint32)
+        h = ((hashes[:, None] ^ (acts[None, :] + 1)) * FNV).astype(np.uint32)
+        ev = ((h * MIX).astype(np.uint32)).astype(np.float64) / float(2 ** 32)
+        accums = (accums[:, None] + ev).reshape(-1)
+        hashes = h.reshape(-1)
+        first_action = (np.arange(a)[None, :] + 0 * first_action[:, None]).reshape(-1) \
+            if level == 0 else np.repeat(first_action, a)
+    total = accums / d
+    if domain.binary_reward:
+        rewards = (total > domain.threshold).astype(np.float64)
+    else:
+        rewards = np.clip(total, 0.0, 1.0)
+    out = np.zeros(a)
+    for i in range(a):
+        out[i] = rewards[first_action == i].mean()
+    return out
+
+
+def optimal_root_action(domain: PGameDomain) -> int:
+    return int(np.argmax(enumerate_root_values(domain)))

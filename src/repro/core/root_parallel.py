@@ -1,0 +1,39 @@
+"""Root parallelization / Ensemble UCT — the §IV baseline (Chaslot; Fern&Lewis).
+
+``workers`` independent sequential searches (no sharing, zero communication),
+root statistics summed at the end.  Perfect playout-speedup, but each worker
+only sees budget/workers playouts — strength saturates (Soejima et al.).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stages as S
+from repro.core.sequential import run_sequential
+from repro.core.tree import ROOT
+
+
+def run_root_parallel(domain, sp: S.SearchParams, budget: int, workers: int,
+                      rng) -> Tuple[dict, dict]:
+    """Returns (combined root stats {action_visits, action_value}, stats)."""
+    per = -(-budget // workers)
+
+    def one(r):
+        tree, _ = run_sequential(domain, sp, per, r)
+        ch = tree["children"][ROOT]
+        valid = ch >= 0
+        idx = jnp.maximum(ch, 0)
+        n = jnp.where(valid, tree["visits"][idx], 0)
+        w = jnp.where(valid, tree["value"][idx], 0.0)
+        return n, w
+
+    ns, ws = jax.vmap(one)(jax.random.split(rng, workers))
+    return ({"action_visits": ns.sum(0), "action_value": ws.sum(0)},
+            {"playouts": jnp.int32(per * workers)})
+
+
+def root_parallel_action(combined) -> jnp.ndarray:
+    return jnp.argmax(combined["action_visits"])

@@ -1,0 +1,197 @@
+"""The four MCTS operation-level tasks (OLT) as pure stage functions.
+
+Paper §V-A: Select / Expand / Playout / Backup, with hard OLD dependencies
+S→E→P→B inside one trajectory and soft ILD between trajectories.  Each stage
+here is a pure function (tree, inputs) -> (tree, outputs) so the pipeline
+scheduler can compose them over in-flight waves.
+
+Serial stages (S, E, B) process a wave's lanes sequentially (scan) — matching
+the paper's serial pipeline stages, and letting virtual loss decorrelate lanes
+within a wave.  The Playout stage is fully parallel (vmap) — the paper's
+replicated playout stage (Fig. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import uct
+from repro.core.tree import ROOT, UNEXPANDED, Tree, get_state, max_nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    cp: float = 1.414
+    vl_weight: float = 1.0
+    max_depth: int = 32
+    puct: bool = False
+    use_pallas: bool = False
+
+    @property
+    def path_len(self) -> int:
+        return self.max_depth + 2          # root .. deepest leaf + expanded child
+
+
+def empty_selection(sp: SearchParams, lanes: int):
+    return {
+        "path": jnp.full((lanes, sp.path_len), UNEXPANDED, jnp.int32),
+        "leaf": jnp.zeros((lanes,), jnp.int32),
+        "depth": jnp.zeros((lanes,), jnp.int32),
+        "valid": jnp.zeros((lanes,), bool),
+        "dup": jnp.zeros((lanes,), bool),
+    }
+
+
+def empty_expansion(sp: SearchParams, lanes: int, domain):
+    state = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((lanes,) + jnp.shape(x), jnp.asarray(x).dtype),
+        domain.root_state())
+    return {
+        "path": jnp.full((lanes, sp.path_len), UNEXPANDED, jnp.int32),
+        "node": jnp.zeros((lanes,), jnp.int32),
+        "is_new": jnp.zeros((lanes,), bool),
+        "state": state,
+        "valid": jnp.zeros((lanes,), bool),
+    }
+
+
+def empty_playout(sp: SearchParams, lanes: int, num_actions: int):
+    return {
+        "path": jnp.full((lanes, sp.path_len), UNEXPANDED, jnp.int32),
+        "node": jnp.zeros((lanes,), jnp.int32),
+        "is_new": jnp.zeros((lanes,), bool),
+        "value": jnp.zeros((lanes,), jnp.float32),
+        "priors": jnp.zeros((lanes, num_actions), jnp.float32),
+        "valid": jnp.zeros((lanes,), bool),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SELECT — UCT descent with virtual loss (serial stage)
+# ---------------------------------------------------------------------------
+def select_one(tree: Tree, sp: SearchParams, valid):
+    """Descend from the root; returns (tree+vl, trajectory dict of scalars)."""
+    def cond(c):
+        node, depth, _ = c
+        fully = (tree["children"][node] >= 0).all()
+        return fully & ~tree["terminal"][node] & (depth < sp.max_depth)
+
+    def body(c):
+        node, depth, path = c
+        ch = tree["children"][node]
+        idx = jnp.maximum(ch, 0)
+        a = uct.uct_argmax(
+            tree["visits"][idx], tree["value"][idx], tree["vloss"][idx],
+            tree["visits"][node] + tree["vloss"][node], sp.cp,
+            vl_weight=sp.vl_weight, prior=tree["prior"][node],
+            puct=sp.puct, valid=ch >= 0, use_pallas=sp.use_pallas)
+        nxt = ch[a]
+        path = path.at[depth + 1].set(nxt)
+        return nxt, depth + 1, path
+
+    path0 = jnp.full((sp.path_len,), UNEXPANDED, jnp.int32).at[0].set(ROOT)
+    leaf, depth, path = jax.lax.while_loop(cond, body, (jnp.int32(ROOT), jnp.int32(0), path0))
+    dup = (tree["vloss"][leaf] > 0) & valid
+    mask = (path >= 0) & valid
+    tree = dict(tree)
+    tree["vloss"] = tree["vloss"].at[jnp.maximum(path, 0)].add(mask.astype(jnp.int32))
+    sel = {"path": jnp.where(valid, path, UNEXPANDED), "leaf": leaf,
+           "depth": depth, "valid": valid, "dup": dup}
+    return tree, sel
+
+
+def select_wave(tree: Tree, sp: SearchParams, lanes: int, valid):
+    """Serial over lanes: lane i+1 sees lane i's virtual loss (paper Fig. 5:
+    one serial Select stage feeding multiple playout stages)."""
+    def body(tr, _):
+        tr, sel = select_one(tr, sp, valid)
+        return tr, sel
+
+    tree, sels = jax.lax.scan(body, tree, None, length=lanes)
+    return tree, sels
+
+
+# ---------------------------------------------------------------------------
+# EXPAND — allocate one child per trajectory (serial stage)
+# ---------------------------------------------------------------------------
+def expand_one(tree: Tree, domain, sp: SearchParams, sel):
+    leaf, depth, valid = sel["leaf"], sel["depth"], sel["valid"]
+    row = tree["children"][leaf]
+    has_slot = (row == UNEXPANDED).any()
+    not_full = tree["next_free"] < max_nodes(tree)
+    can = valid & has_slot & ~tree["terminal"][leaf] & not_full
+    a = jnp.argmax(row == UNEXPANDED).astype(jnp.int32)
+    new = tree["next_free"]
+    parent_state = get_state(tree, leaf)
+    child_state = domain.step(parent_state, a)
+    term = domain.is_terminal(child_state)
+
+    widx = jnp.where(can, new, max_nodes(tree))            # OOB -> dropped
+    tree = dict(tree)
+    tree["children"] = tree["children"].at[jnp.where(can, leaf, max_nodes(tree)), a].set(new, mode="drop")
+    tree["parent"] = tree["parent"].at[widx].set(leaf, mode="drop")
+    tree["action"] = tree["action"].at[widx].set(a, mode="drop")
+    tree["terminal"] = tree["terminal"].at[widx].set(term, mode="drop")
+    tree["vloss"] = tree["vloss"].at[widx].add(1, mode="drop")
+    tree["state"] = jax.tree_util.tree_map(
+        lambda buf, s: buf.at[widx].set(s, mode="drop"), tree["state"], child_state)
+    tree["next_free"] = tree["next_free"] + can.astype(jnp.int32)
+
+    node = jnp.where(can, new, leaf)
+    path = sel["path"].at[depth + 1].set(jnp.where(can, new, UNEXPANDED))
+    state = jax.tree_util.tree_map(
+        lambda s_par, s_ch: jnp.where(
+            jnp.reshape(can, (1,) * jnp.ndim(s_ch)), s_ch, s_par)
+        if jnp.ndim(s_ch) else jnp.where(can, s_ch, s_par),
+        parent_state, child_state)
+    return tree, {"path": path, "node": node, "is_new": can, "state": state,
+                  "valid": valid}
+
+
+def expand_wave(tree: Tree, domain, sp: SearchParams, sels):
+    def body(tr, sel):
+        tr, exp = expand_one(tr, domain, sp, sel)
+        return tr, exp
+
+    tree, exps = jax.lax.scan(body, tree, sels)
+    return tree, exps
+
+
+# ---------------------------------------------------------------------------
+# PLAYOUT — parallel stage (vmap over lanes; paper Fig. 5 replicated stage)
+# ---------------------------------------------------------------------------
+def playout_wave(domain, sp: SearchParams, exp, rng):
+    lanes = exp["node"].shape[0]
+    rngs = jax.random.split(rng, lanes)
+    values = jax.vmap(domain.playout)(exp["state"], rngs)
+    if hasattr(domain, "priors"):
+        priors = jax.vmap(domain.priors)(exp["state"])
+    else:
+        a = domain.num_actions
+        priors = jnp.full((lanes, a), 1.0 / a, jnp.float32)
+    return {"path": exp["path"], "node": exp["node"], "is_new": exp["is_new"],
+            "value": values.astype(jnp.float32), "priors": priors,
+            "valid": exp["valid"]}
+
+
+# ---------------------------------------------------------------------------
+# BACKUP — scatter-add along paths (commutative => order-independent)
+# ---------------------------------------------------------------------------
+def backup_wave(tree: Tree, po):
+    paths = po["path"]                                     # [L, P]
+    valid = po["valid"]
+    mask = (paths >= 0) & valid[:, None]
+    idx = jnp.maximum(paths, 0).reshape(-1)
+    m = mask.reshape(-1)
+    vals = jnp.broadcast_to(po["value"][:, None], paths.shape).reshape(-1)
+    tree = dict(tree)
+    tree["visits"] = tree["visits"].at[idx].add(m.astype(jnp.int32))
+    tree["value"] = tree["value"].at[idx].add(jnp.where(m, vals, 0.0))
+    tree["vloss"] = tree["vloss"].at[idx].add(-m.astype(jnp.int32))
+    # write priors for freshly created nodes
+    widx = jnp.where(po["is_new"] & valid, po["node"], max_nodes(tree))
+    tree["prior"] = tree["prior"].at[widx].set(po["priors"], mode="drop")
+    return tree

@@ -1,0 +1,96 @@
+"""Structure-of-arrays MCTS search tree (device-resident, pure-functional).
+
+The TPU analogue of the paper's lock-free shared tree: every mutation is a
+scatter-add/scatter-set inside jit, so concurrent waves commute by
+construction (backup is an add — order-independent, which is what makes the
+paper's out-of-order nonlinear pipeline sound; see DESIGN.md §2).
+
+Layout (N = max_nodes, A = num_actions):
+    visits   [N] i32    visit count n_j
+    value    [N] f32    reward sum  w_j
+    vloss    [N] i32    virtual-loss counters (in-flight trajectories through j)
+    parent   [N] i32    parent index (-1 for root)
+    action   [N] i32    action taken from parent
+    children [N, A] i32 child indices (UNEXPANDED = -1)
+    prior    [N, A] f32 child priors (uniform for plain UCT, policy for PUCT)
+    terminal [N] bool   node is a terminal state
+    state    pytree     per-node domain state, leading dim N
+    next_free scalar i32
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+UNEXPANDED = -1
+ROOT = 0
+
+Tree = Dict[str, Any]
+
+
+def init_tree(domain, max_nodes: int) -> Tree:
+    a = domain.num_actions
+    root_state = domain.root_state()
+    state = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((max_nodes,) + jnp.shape(x), jnp.asarray(x).dtype)
+        .at[ROOT].set(x), root_state)
+    return {
+        "visits": jnp.zeros((max_nodes,), jnp.int32),
+        "value": jnp.zeros((max_nodes,), jnp.float32),
+        "vloss": jnp.zeros((max_nodes,), jnp.int32),
+        "parent": jnp.full((max_nodes,), UNEXPANDED, jnp.int32),
+        "action": jnp.full((max_nodes,), UNEXPANDED, jnp.int32),
+        "children": jnp.full((max_nodes, a), UNEXPANDED, jnp.int32),
+        "prior": jnp.full((max_nodes, a), 1.0 / a, jnp.float32),
+        "terminal": jnp.zeros((max_nodes,), bool)
+        .at[ROOT].set(domain.is_terminal(root_state)),
+        "state": state,
+        "next_free": jnp.asarray(1, jnp.int32),
+    }
+
+
+def max_nodes(tree: Tree) -> int:
+    return tree["visits"].shape[0]
+
+
+def num_actions(tree: Tree) -> int:
+    return tree["children"].shape[1]
+
+
+def get_state(tree: Tree, node):
+    return jax.tree_util.tree_map(lambda x: x[node], tree["state"])
+
+
+def root_action_by_visits(tree: Tree):
+    """Final move selection: most-visited root child (standard robust child)."""
+    ch = tree["children"][ROOT]
+    n = jnp.where(ch >= 0, tree["visits"][jnp.maximum(ch, 0)], -1)
+    return jnp.argmax(n)
+
+
+def root_child_stats(tree: Tree):
+    ch = tree["children"][ROOT]
+    valid = ch >= 0
+    idx = jnp.maximum(ch, 0)
+    n = jnp.where(valid, tree["visits"][idx], 0)
+    w = jnp.where(valid, tree["value"][idx], 0.0)
+    return n, w, valid
+
+
+def check_consistency(tree: Tree) -> Dict[str, Any]:
+    """Host-side invariants (tests): visit flow conservation, vloss drained."""
+    nf = int(tree["next_free"])
+    visits = tree["visits"][:nf]
+    parent = tree["parent"][:nf]
+    ok_vloss = bool((tree["vloss"] == 0).all())
+    # each non-root node's visits accumulate into ancestors: root visits ==
+    # number of completed backups; sum of root-children visits <= root visits
+    ch = tree["children"][ROOT]
+    child_idx = ch[ch >= 0]
+    child_sum = int(tree["visits"][child_idx].sum()) if child_idx.size else 0
+    ok_flow = child_sum <= int(visits[ROOT])
+    ok_parent = bool((parent[1:] >= 0).all()) and bool((parent[1:] < nf).all())
+    return {"vloss_drained": ok_vloss, "visit_flow": ok_flow,
+            "parents_valid": ok_parent, "nodes": nf}

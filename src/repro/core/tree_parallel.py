@@ -1,0 +1,34 @@
+"""Tree parallelization with virtual loss — the §IV baseline (Chaslot et al.).
+
+Synchronous shared-tree parallelism: per round, ``threads`` trajectories are
+selected (with virtual loss), expanded, played out in parallel, and backed up
+together.  Staleness grows with ``threads`` (every trajectory in a round is
+selected before ANY of the round's backups) — this is the search-overhead
+regime the paper's pipeline bounds by its fixed in-flight window.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stages as S
+from repro.core.tree import Tree, init_tree
+
+
+def run_tree_parallel(domain, sp: S.SearchParams, budget: int, threads: int,
+                      rng, max_nodes: int = 0) -> Tuple[Tree, dict]:
+    rounds = -(-budget // threads)
+    tree = init_tree(domain, max_nodes or rounds * threads + 2)
+
+    def round_fn(tree, rng_t):
+        tree, sels = S.select_wave(tree, sp, threads, jnp.asarray(True))
+        tree, exps = S.expand_wave(tree, domain, sp, sels)
+        po = S.playout_wave(domain, sp, exps, rng_t)
+        tree = S.backup_wave(tree, po)
+        return tree, {"dup": sels["dup"].sum()}
+
+    tree, stats = jax.lax.scan(round_fn, tree, jax.random.split(rng, rounds))
+    return tree, {"playouts": jnp.int32(rounds * threads),
+                  "duplicates": stats["dup"].sum()}

@@ -1,0 +1,47 @@
+"""UCT / PUCT child scoring — reference jnp path + Pallas-kernel dispatch.
+
+Paper eq. (1):  UCT_j = w_j / n_j + C_p * sqrt(ln(n) / n_j)
+
+Virtual loss (in-flight decorrelation, §IV related work / DESIGN §2):
+    n_j^eff = n_j + vl_j
+    w_j^eff = w_j - vl_weight * vl_j     (pessimistic in-flight estimate)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def uct_scores(child_n, child_w, child_vl, parent_n, cp, *, vl_weight=1.0,
+               prior=None, puct=False):
+    """All inputs per-child [..., A]; parent_n broadcastable. fp32 scores."""
+    n_eff = (child_n + child_vl).astype(jnp.float32)
+    w_eff = child_w - vl_weight * child_vl.astype(jnp.float32)
+    pn = jnp.maximum(parent_n.astype(jnp.float32), 1.0)
+    q = w_eff / jnp.maximum(n_eff, 1.0)
+    if puct:
+        assert prior is not None
+        explore = prior * jnp.sqrt(pn)[..., None] / (1.0 + n_eff)
+    else:
+        explore = jnp.sqrt(jnp.log(pn)[..., None] / jnp.maximum(n_eff, 1.0))
+    scores = q + cp * explore
+    # unvisited & not in flight -> must-explore (paper: UCT = inf)
+    return jnp.where(n_eff < 0.5, jnp.float32(1e30), scores)
+
+
+def uct_argmax(child_n, child_w, child_vl, parent_n, cp, *, vl_weight=1.0,
+               prior=None, puct=False, valid=None, use_pallas=False,
+               interpret=False):
+    """Best child index along the last axis. ``valid`` masks illegal slots."""
+    if use_pallas and not puct:
+        from repro.kernels.uct_select import ops as uops
+        return uops.uct_argmax(child_n, child_w, child_vl, parent_n,
+                               cp=cp, vl_weight=vl_weight,
+                               valid=valid, interpret=interpret)
+    s = uct_scores(child_n, child_w, child_vl, parent_n, cp,
+                   vl_weight=vl_weight, prior=prior, puct=puct)
+    if valid is not None:
+        s = jnp.where(valid, s, NEG_INF)
+    return jnp.argmax(s, axis=-1).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, Prefetcher, make_batch_iterator, synthetic_batch,
+)

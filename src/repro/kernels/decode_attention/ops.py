@@ -1,0 +1,31 @@
+"""jit'd wrapper for flash-decode: [B,1,H,D] public layout."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import kernel as K
+from repro.kernels.decode_attention import ref as R
+
+
+def decode_attention(q, k, v, valid_len, *, blk_k: int = 512,
+                     interpret: bool = False, use_ref: bool = False):
+    """q [B,1,H,D]; k, v [B,Sk,Hkv,D]; valid_len [B] -> [B,1,H,D]."""
+    b, one, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    scale = 1.0 / math.sqrt(d)
+    if use_ref:
+        return R.decode_attention_ref(q, k, v, valid_len, scale=scale)
+    blk = min(blk_k, max(128, 1 << (sk - 1).bit_length()))
+    pad = (-sk) % blk
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    if pad:
+        kb = jnp.pad(kb, ((0, 0), (0, pad), (0, 0)))
+        vb = jnp.pad(vb, ((0, 0), (0, pad), (0, 0)))
+    ob = K.decode_attention_bhd(qb, kb, vb, valid_len.astype(jnp.int32),
+                                scale=scale, blk_k=blk, interpret=interpret)
+    return ob.reshape(b, h, 1, d).transpose(0, 2, 1, 3)

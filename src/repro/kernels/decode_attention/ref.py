@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash-decode (single-query attention w/ valid mask)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, valid_len, *, scale: float):
+    """q [B,1,H,D]; k, v [B,Sk,Hkv,D]; valid_len [B] -> [B,1,H,D]."""
+    b, _, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = h // hkv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    keep = jnp.arange(sk)[None, :] < valid_len[:, None]
+    s = jnp.where(keep[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""jit'd wrapper: [B,S,H,D] public layout, padding to MXU-aligned blocks."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref as R
+
+
+def _pad_to(x, axis, mult):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False, use_ref: bool = False):
+    """q [B,Sq,H,D]; k, v [B,Sk,Hkv,D] -> [B,Sq,H,D]."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    scale = 1.0 / math.sqrt(d)
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    if use_ref:
+        ob = R.attention_bhsd_ref(qb, kb, vb, causal=causal, scale=scale)
+        return ob.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    blk_q_eff = min(blk_q, max(8, 1 << (sq - 1).bit_length()))
+    blk_k_eff = min(blk_k, max(8, 1 << (sk - 1).bit_length()))
+    qp = _pad_to(qb, 1, blk_q_eff)
+    kp = _pad_to(kb, 1, blk_k_eff)
+    vp = _pad_to(vb, 1, blk_k_eff)
+    ob = K.flash_attention_bhsd(qp, kp, vp, causal=causal, scale=scale,
+                                blk_q=blk_q_eff, blk_k=blk_k_eff,
+                                seq_k_valid=sk, interpret=interpret)
+    ob = ob[:, :sq]
+    return ob.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash attention (same layout as the kernel)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_bhsd_ref(q, k, v, *, causal: bool, scale: float):
+    """q [BH, Sq, D]; k, v [BHkv, Sk, D] (GQA by head-group repetition)."""
+    bh, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    group = bh // bhkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

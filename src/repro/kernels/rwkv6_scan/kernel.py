@@ -1,0 +1,116 @@
+"""Pallas TPU chunked WKV6 kernel (RWKV-6 recurrence).
+
+Grid = (B*H, T/CHUNK); the chunk dimension is sequential with the [N, N]
+recurrent state held in VMEM scratch across chunks.  Within a chunk the
+recurrence is the matmul-form linear-attention trick (cumulative-decay
+rescaling) so the MXU does the work; cumulative sums are computed as a
+lower-triangular matmul (MXU-friendly, no serial scan).
+
+TPU adaptation of the CUDA wkv6 kernel (arXiv:2404.05892): instead of one
+thread per channel with registers, one (head, chunk) tile per grid step with
+VMEM-resident state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 s_scr, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)          # [C, N]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # [1, N]
+    S = s_scr[...]                            # [N, N] (key x value)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    tril_inc = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    cum = jax.lax.dot(tril_inc, logw, preferred_element_type=jnp.float32)
+    w_incl = jnp.exp(cum)                     # prod_{s<=t}
+    w_excl = jnp.exp(cum - logw)              # prod_{s<t}
+    w_tot = jnp.exp(cum[-1:])                 # [1, N]
+
+    r_dec = r * w_excl
+    y_state = jax.lax.dot(r_dec, S, preferred_element_type=jnp.float32)
+    k_sc = k / jnp.maximum(w_incl, 1e-38)
+    att = jax.lax.dot_general(r_dec, k_sc, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [C, C]
+    att = att * jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+    y_intra = jax.lax.dot(att, v, preferred_element_type=jnp.float32)
+    bonus = jnp.sum(r * (u * k), axis=1, keepdims=True)            # [C, 1]
+    y = y_state + y_intra + bonus * v
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    k_dec = k * (w_tot / jnp.maximum(w_incl, 1e-38))
+    s_new = S * jnp.transpose(w_tot) + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        sT_ref[0] = s_new
+
+
+def wkv6_bh(r, k, v, w, u, state, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w [BH, T, N]; u [H, N]; state [BH, N, N] -> (y, final_state)."""
+    bh, t, n = r.shape
+    h = u.shape[0]
+    nc = t // chunk
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk)
+    tile = lambda b, ci: (b, ci, 0)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), tile),
+            pl.BlockSpec((1, chunk, n), tile),
+            pl.BlockSpec((1, chunk, n), tile),
+            pl.BlockSpec((1, chunk, n), tile),
+            pl.BlockSpec((1, n), lambda b, ci: (b % h, 0)),
+            pl.BlockSpec((1, n, n), lambda b, ci: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, n), tile),
+            pl.BlockSpec((1, n, n), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, n), r.dtype),
+            jax.ShapeDtypeStruct((bh, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, sT
+
+
+def wkv6_pallas(r, k, v, w, u, state, *, chunk: int = 64,
+                interpret: bool = False):
+    """Public layout: r,k,v,w [B,T,H,N]; u [H,N]; state [B,H,N,N]."""
+    b, t, h, n = r.shape
+    pad = (-t) % chunk
+    tr = lambda x: jnp.pad(x.transpose(0, 2, 1, 3).reshape(b * h, t, n),
+                           ((0, 0), (0, pad), (0, 0)))
+    rb, kb, vb = tr(r), tr(k), tr(v)
+    # pad decay with 1.0 (log 0) so padded steps leave the state unchanged
+    wb = jnp.pad(w.transpose(0, 2, 1, 3).reshape(b * h, t, n),
+                 ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    sb = state.reshape(b * h, n, n)
+    y, sT = wkv6_bh(rb, kb, vb, wb, u, sb, chunk=min(chunk, t + pad),
+                    interpret=interpret)
+    y = y[:, :t].reshape(b, h, t, n).transpose(0, 2, 1, 3)
+    return y, sT.reshape(b, h, n, n)

@@ -1,0 +1,79 @@
+"""jit'd dispatch wrapper for the WKV6 recurrence.
+
+``impl``:
+  * ``auto``      — chunked for sequences, sequential for single steps;
+  * ``sequential``— O(T) scan (exact oracle; bwd saves per-step residuals);
+  * ``chunked``   — matmul-form chunks with per-chunk remat (training path;
+                    cumulative-decay exponents clamped at -30 in log space,
+                    error only where the decay product < 1e-13);
+  * ``pallas``    — TPU kernel (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan import ref
+
+LOG_CLAMP = -30.0
+
+
+def wkv6_chunked(r, k, v, w, u, state, *, chunk: int = 32, remat: bool = True):
+    """Chunked WKV6 with clamped log-decay and optional per-chunk remat."""
+    b, t, h, n = r.shape
+    pad = (-t) % chunk
+    if pad:
+        padw = lambda x, cv: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                                     constant_values=cv)
+        r, k, v = padw(r, 0), padw(k, 0), padw(v, 0)
+        w = padw(w, 1.0)
+    tt = t + pad
+    nc = tt // chunk
+    f32 = jnp.float32
+    rs = r.reshape(b, nc, chunk, h, n)
+    ks = k.reshape(b, nc, chunk, h, n)
+    vs = v.reshape(b, nc, chunk, h, n)
+    ws = w.reshape(b, nc, chunk, h, n)
+    u_ = u.astype(f32)
+
+    def chunk_step(S, inp):
+        rc, kc, vc, wc = (t.astype(f32) for t in inp)         # [B,C,H,N]
+        logw = jnp.log(jnp.maximum(wc, 1e-38))
+        cum = jnp.cumsum(logw, axis=1)
+        cum_c = jnp.maximum(cum, LOG_CLAMP)                   # clamped divisor
+        w_excl = jnp.exp(cum - logw)
+        w_tot = jnp.exp(cum[:, -1])
+        r_dec = rc * w_excl
+        y_state = jnp.einsum("bchj,bhji->bchi", r_dec, S)
+        k_sc = kc * jnp.exp(-cum_c)
+        att = jnp.einsum("bchj,bshj->bhcs", r_dec, k_sc)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhcs,bshi->bchi", att, vc)
+        bonus = jnp.einsum("bchj,bchj->bch", rc, u_[None, None] * kc)
+        y = y_state + y_intra + bonus[..., None] * vc
+        k_dec = kc * jnp.exp(jnp.maximum(cum[:, -1][:, None] - cum, LOG_CLAMP))
+        S = S * w_tot[..., None] + jnp.einsum("bshj,bshi->bhji", k_dec, vc)
+        return S, y
+
+    if remat:
+        chunk_step = jax.checkpoint(
+            chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    state, ys = jax.lax.scan(
+        chunk_step, state.astype(f32),
+        tuple(x.transpose(1, 0, 2, 3, 4) for x in (rs, ks, vs, ws)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, tt, h, n)[:, :t]
+    return y.astype(r.dtype), state
+
+
+def wkv6(r, k, v, w, u, state, *, use_pallas: bool = False,
+         interpret: bool = False, impl: str = "auto", chunk: int = 32):
+    """(y, new_state). Pallas chunked kernel on TPU, jnp elsewhere."""
+    if use_pallas or impl == "pallas":
+        from repro.kernels.rwkv6_scan import kernel
+        return kernel.wkv6_pallas(r, k, v, w, u, state, interpret=interpret)
+    if impl == "chunked" or (impl == "auto" and r.shape[1] > 1):
+        return wkv6_chunked(r, k, v, w, u, state, chunk=chunk)
+    return ref.wkv6_ref(r, k, v, w, u, state)

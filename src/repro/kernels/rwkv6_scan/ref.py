@@ -1,0 +1,90 @@
+"""Pure-jnp oracle for the WKV6 recurrence (RWKV-6 "Finch").
+
+Per head with key/value width N and data-dependent per-channel decay w:
+
+    y_t[i]   = sum_j r_t[j] * (S[j, i] + u[j] * k_t[j] * v_t[i])
+    S[j, i] <- w_t[j] * S[j, i] + k_t[j] * v_t[i]
+
+Shapes: r, k, v, w  [B, T, H, N];  u [H, N];  state [B, H, N, N] (key x value).
+``w`` is the *decay factor* already in (0, 1) (the model computes
+``exp(-exp(w_raw))``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """Sequential time scan. Returns (y [B,T,H,N], final_state)."""
+    f32 = jnp.float32
+    r_, k_, v_, w_ = (x.astype(f32).transpose(1, 0, 2, 3) for x in (r, k, v, w))
+    u_ = u.astype(f32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                                  # [B,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]                # [B,H,N,N]
+        y = jnp.einsum("bhj,bhji->bhi", r_t, S + u_[None, :, :, None] * kv)
+        S = S * w_t[..., :, None] + kv
+        return S, y
+
+    state, ys = jax.lax.scan(step, state.astype(f32), (r_, k_, v_, w_))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def wkv6_chunked_ref(r, k, v, w, u, state, chunk: int = 16):
+    """Chunked formulation (mirrors the Pallas kernel's math).
+
+    Within a chunk of length C, with cumulative decay
+    W_t = prod_{s<=t} w_s (exclusive of s=t for the incoming-state term):
+
+      y_t = r_t . (Wcum_t * S_in)            (state contribution)
+          + sum_{s<t} r_t . (W_{s+1..t-1}... (intra-chunk, causal)
+          + u-bonus diagonal term
+
+    Implemented by rescaling keys/queries with cumulative decays, the standard
+    linear-attention chunk trick (Mamba2/GLA/RWKV6 papers).
+    """
+    b, t, h, n = r.shape
+    assert t % chunk == 0, (t, chunk)
+    f32 = jnp.float32
+    nc = t // chunk
+    rs = r.astype(f32).reshape(b, nc, chunk, h, n)
+    ks = k.astype(f32).reshape(b, nc, chunk, h, n)
+    vs = v.astype(f32).reshape(b, nc, chunk, h, n)
+    ws = w.astype(f32).reshape(b, nc, chunk, h, n)
+    u_ = u.astype(f32)
+
+    def chunk_step(S, inp):
+        rc, kc, vc, wc = inp                                      # [B,C,H,N]
+        logw = jnp.log(jnp.maximum(wc, 1e-38))
+        cum = jnp.cumsum(logw, axis=1)                            # inclusive
+        w_incl = jnp.exp(cum)                                     # prod_{s<=t}
+        w_excl = jnp.exp(cum - logw)                              # prod_{s<t}
+        w_tot = jnp.exp(cum[:, -1])                               # [B,H,N]
+
+        # state contribution: r_t * prod_{s<t} w_s . S
+        r_dec = rc * w_excl
+        y_state = jnp.einsum("bchj,bhji->bchi", r_dec, S)
+        # intra-chunk causal (strictly lower): A[ts] = r_t . (k_s * W(s+1..t-1? ))
+        # k_s contributes to t>s with decay prod_{s<u<=t-1}... using scaled forms:
+        # r~_t = r_t * w_excl_t ; k~_s = k_s / w_incl_s  gives decay prod_{s+1..t-1}
+        k_sc = kc / jnp.maximum(w_incl, 1e-38)
+        att = jnp.einsum("bchj,bshj->bhcs", r_dec, k_sc)          # [B,H,C,C]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhcs,bshi->bchi", att, vc)
+        # current-token bonus
+        bonus = jnp.einsum("bchj,bchj->bch", rc, u_[None, None] * kc)
+        y_bonus = bonus[..., None] * vc
+        y = y_state + y_intra + y_bonus
+        # state update: S' = w_tot * S + sum_s (prod_{u>s} w_u) k_s v_s^T
+        k_dec = kc * (w_tot[:, None] / jnp.maximum(w_incl, 1e-38))
+        S = S * w_tot[..., None] + jnp.einsum("bshj,bshi->bhji", k_dec, vc)
+        return S, y
+
+    state, ys = jax.lax.scan(
+        chunk_step, state.astype(f32),
+        tuple(x.transpose(1, 0, 2, 3, 4) for x in (rs, ks, vs, ws)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, n)
+    return y.astype(r.dtype), state

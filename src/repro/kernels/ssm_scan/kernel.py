@@ -1,0 +1,120 @@
+"""Pallas TPU chunked Mamba-2 SSD kernel.
+
+Grid = (B*H, T/CHUNK); chunk dimension sequential, [P, N] state in VMEM
+scratch.  Intra-chunk work is the SSD matmul form (arXiv:2405.21060 §6) —
+cumulative log-decays via triangular matmul, decay-weighted C·Bᵀ attention —
+so the MXU executes the recurrence.  B/C projections are shared across heads
+(single group) and indexed per-batch in the BlockSpec, not materialized per
+head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, la_ref, b_ref, c_ref, s0_ref, y_ref, sT_ref,
+                s_scr, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # [C, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [C, 1]
+    la = la_ref[0].astype(jnp.float32)        # [C, 1]  log decay
+    Bc = b_ref[0].astype(jnp.float32)         # [C, N]
+    Cc = c_ref[0].astype(jnp.float32)         # [C, N]
+    S = s_scr[...]                            # [P, N]
+
+    tril_inc = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    cum = jax.lax.dot(tril_inc, la, preferred_element_type=jnp.float32)  # [C,1]
+    seg = jnp.exp(cum)                        # prod_{s<=t} a_s
+    # state contribution: y_t = seg_t * C_t . S^T
+    y_state = seg * jax.lax.dot_general(
+        Cc, S, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)  # [C,P]
+    # intra-chunk: w[t,s] = (C_t.B_s) * exp(cum_t - cum_s), s <= t
+    att = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)            # [C,C]
+    dec = jnp.exp(cum - jnp.transpose(cum))
+    w = att * dec * tril_inc
+    xdt = x * dt
+    y = y_state + jax.lax.dot(w, xdt, preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    tot = jnp.exp(cum[-1:])                   # [1, 1]
+    k_dec = jnp.exp(cum[-1:] - cum)           # [C, 1]
+    s_new = S * tot + jax.lax.dot_general(
+        xdt * k_dec, Bc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [P, N]
+    s_scr[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        sT_ref[0] = s_new
+
+
+def ssd_bh(x, dt, la, Bm, Cm, state, *, n_heads: int, chunk: int = 64,
+           interpret: bool = False):
+    """x [BH,T,P]; dt, la [BH,T,1]; Bm, Cm [B,T,N]; state [BH,P,N]."""
+    bh, t, p = x.shape
+    n = Bm.shape[-1]
+    nc = t // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    tile = lambda b, ci: (b, ci, 0)
+    shared = lambda b, ci: (b // n_heads, ci, 0)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), tile),
+            pl.BlockSpec((1, chunk, 1), tile),
+            pl.BlockSpec((1, chunk, 1), tile),
+            pl.BlockSpec((1, chunk, n), shared),
+            pl.BlockSpec((1, chunk, n), shared),
+            pl.BlockSpec((1, p, n), lambda b, ci: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), tile),
+            pl.BlockSpec((1, p, n), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(x, dt, la, Bm, Cm, state)
+    return y, sT
+
+
+def ssd_pallas(x, dt, A, Bm, Cm, D, state, *, chunk: int = 64,
+               interpret: bool = False):
+    """Public layout: x [B,T,H,P]; dt [B,T,H]; A,D [H]; Bm,Cm [B,T,N];
+    state [B,H,P,N] -> (y [B,T,H,P], final_state)."""
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    pad = (-t) % chunk
+    xb = jnp.pad(x.transpose(0, 2, 1, 3).reshape(b * h, t, p),
+                 ((0, 0), (0, pad), (0, 0)))
+    dtb = jnp.pad(dt.transpose(0, 2, 1).reshape(b * h, t, 1),
+                  ((0, 0), (0, pad), (0, 0)))
+    la = dt * A[None, None, :]
+    lab = jnp.pad(la.transpose(0, 2, 1).reshape(b * h, t, 1),
+                  ((0, 0), (0, pad), (0, 0)))      # pad log-decay 0 => decay 1
+    Bp = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+    Cp = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sb = state.reshape(b * h, p, n)
+    y, sT = ssd_bh(xb, dtb, lab, Bp, Cp, sb, n_heads=h,
+                   chunk=min(chunk, t + pad), interpret=interpret)
+    y = y[:, :t].reshape(b, h, t, p).transpose(0, 2, 1, 3)
+    y = y + D.astype(y.dtype)[None, None, :, None] * x.astype(y.dtype)
+    return y, sT.reshape(b, h, p, n)

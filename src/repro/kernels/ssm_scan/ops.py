@@ -1,0 +1,72 @@
+"""jit'd dispatch wrapper for the Mamba-2 SSD scan.
+
+``impl``: auto (chunked for sequences) | sequential | chunked | pallas.
+The chunked path is numerically safe without clamping (decays <= 1, all
+exponents non-positive) and runs with per-chunk remat for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import ref
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, state, *, chunk: int = 64,
+                remat: bool = True):
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    tt = t + pad
+    nc = tt // chunk
+    f32 = jnp.float32
+    xs = x.reshape(b, nc, chunk, h, p)
+    dts = dt.astype(f32).reshape(b, nc, chunk, h)
+    Bs = Bm.reshape(b, nc, chunk, n)
+    Cs = Cm.reshape(b, nc, chunk, n)
+    A_ = A.astype(f32)
+
+    def chunk_step(S, inp):
+        xc, dtc, Bc, Cc = (t.astype(f32) for t in inp)
+        la = dtc * A_[None, None]
+        cum = jnp.cumsum(la, axis=1)
+        seg = jnp.exp(cum)
+        y_state = jnp.einsum("bcn,bhpn,bch->bchp", Cc, S, seg)
+        att = jnp.einsum("bcn,bsn->bcs", Cc, Bc)
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        wgt = att[..., None] * jnp.where(mask[None, :, :, None], dec, 0.0)
+        xdt = xc * dtc[..., None]
+        y = y_state + jnp.einsum("bcsh,bshp->bchp", wgt, xdt)
+        tot = jnp.exp(cum[:, -1])
+        k_dec = jnp.exp(cum[:, -1][:, None] - cum)
+        S = S * tot[:, :, None, None] + jnp.einsum(
+            "bch,bchp,bcn->bhpn", k_dec * dtc, xc, Bc)
+        return S, y
+
+    if remat:
+        chunk_step = jax.checkpoint(
+            chunk_step, policy=jax.checkpoint_policies.nothing_saveable)
+    state, ys = jax.lax.scan(
+        chunk_step, state.astype(f32),
+        (xs.transpose(1, 0, 2, 3, 4), dts.transpose(1, 0, 2, 3),
+         Bs.transpose(1, 0, 2, 3), Cs.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, tt, h, p)[:, :t]
+    y = y + D.astype(f32)[None, None, :, None] * x.astype(f32)[:, :t]
+    return y.astype(x.dtype), state
+
+
+def ssd(x, dt, A, Bm, Cm, D, state, *, use_pallas: bool = False,
+        interpret: bool = False, impl: str = "auto", chunk: int = 64):
+    """(y, new_state). Pallas chunked kernel on TPU, jnp elsewhere."""
+    if use_pallas or impl == "pallas":
+        from repro.kernels.ssm_scan import kernel
+        return kernel.ssd_pallas(x, dt, A, Bm, Cm, D, state, interpret=interpret)
+    if impl == "chunked" or (impl == "auto" and x.shape[1] > 1):
+        return ssd_chunked(x, dt, A, Bm, Cm, D, state, chunk=chunk)
+    return ref.ssd_ref(x, dt, A, Bm, Cm, D, state)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the Mamba-2 SSD recurrence (arXiv:2405.21060).
+
+Per head with head-dim P and state-dim N:
+
+    a_t      = exp(dt_t * A)                     (A < 0 scalar per head)
+    S_t      = a_t * S_{t-1} + dt_t * x_t B_t^T  (S in R^{P x N})
+    y_t      = S_t C_t + D * x_t
+
+Shapes: x [B,T,H,P]; dt [B,T,H]; A,D [H]; Bm,Cm [B,T,N] (single group);
+state [B,H,P,N].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D, state):
+    """Sequential time scan. Returns (y [B,T,H,P], final_state)."""
+    f32 = jnp.float32
+    xT = x.astype(f32).transpose(1, 0, 2, 3)          # [T,B,H,P]
+    dtT = dt.astype(f32).transpose(1, 0, 2)           # [T,B,H]
+    BT = Bm.astype(f32).transpose(1, 0, 2)            # [T,B,N]
+    CT = Cm.astype(f32).transpose(1, 0, 2)
+    A_ = A.astype(f32)
+    D_ = D.astype(f32)
+
+    def step(S, inp):
+        x_t, dt_t, B_t, C_t = inp
+        a_t = jnp.exp(dt_t * A_)                      # [B,H]
+        upd = (dt_t[..., None] * x_t)[..., :, None] * B_t[:, None, None, :]
+        S = S * a_t[..., None, None] + upd            # [B,H,P,N]
+        y = jnp.einsum("bhpn,bn->bhp", S, C_t) + D_[None, :, None] * x_t
+        return S, y
+
+    state, ys = jax.lax.scan(step, state.astype(f32), (xT, dtT, BT, CT))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, D, state, chunk: int = 16):
+    """Chunked (matmul-form) SSD — mirrors the Pallas kernel's math."""
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    assert t % chunk == 0
+    f32 = jnp.float32
+    nc = t // chunk
+    xs = x.astype(f32).reshape(b, nc, chunk, h, p)
+    dts = dt.astype(f32).reshape(b, nc, chunk, h)
+    Bs = Bm.astype(f32).reshape(b, nc, chunk, n)
+    Cs = Cm.astype(f32).reshape(b, nc, chunk, n)
+    A_ = A.astype(f32)
+
+    def chunk_step(S, inp):
+        xc, dtc, Bc, Cc = inp                         # [B,C,H,P],[B,C,H],[B,C,N]
+        la = dtc * A_[None, None]                     # log a_t  [B,C,H]
+        cum = jnp.cumsum(la, axis=1)                  # inclusive  [B,C,H]
+        seg = jnp.exp(cum)                            # prod_{s<=t} a_s
+        # y state contribution: C_t . (prod_{s<=t} a_s) S
+        y_state = jnp.einsum("bcn,bhpn,bch->bchp", Cc, S, seg)
+        # intra-chunk: pair (t,s), s<=t: decay prod_{s<u<=t} a_u = seg_t/seg_s
+        att = jnp.einsum("bcn,bsn->bcs", Cc, Bc)      # [B,C,C]
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # [B,C,S,H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = att[..., None] * jnp.where(mask[None, :, :, None], dec, 0.0)
+        xdt = xc * dtc[..., None]                     # [B,C,H,P]
+        y_intra = jnp.einsum("bcsh,bshp->bchp", w, xdt)
+        y = y_state + y_intra
+        # state update
+        tot = jnp.exp(cum[:, -1])                     # [B,H]
+        k_dec = jnp.exp(cum[:, -1][:, None] - cum)    # prod_{u>s} a_u  [B,C,H]
+        S = S * tot[:, :, None, None] + jnp.einsum(
+            "bch,bchp,bcn->bhpn", k_dec * dtc, xc, Bc)
+        return S, y
+
+    state, ys = jax.lax.scan(
+        chunk_step, state.astype(f32),
+        tuple(a.transpose(1, 0, 2, 3, 4) if a.ndim == 5 else a.transpose(1, 0, 2, 3)
+              for a in (xs, dts, Bs, Cs)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    y = y + D.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), state

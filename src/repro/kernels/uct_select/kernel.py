@@ -1,0 +1,55 @@
+"""Pallas TPU fused UCT score + masked argmax over children tiles.
+
+The Select stage's hot op (paper eq. 1): for a batch of R tree nodes with A
+children each, compute UCT scores with virtual loss and return the best child
+index per node — fused in VMEM, no [R, A] score array round-trip through HBM.
+Action width is lane-padded to 128 by the ops layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _uct_kernel(n_ref, w_ref, vl_ref, pn_ref, valid_ref, o_ref, *,
+                cp: float, vl_weight: float):
+    n = n_ref[...].astype(jnp.float32)           # [BLK_R, A]
+    w = w_ref[...]
+    vl = vl_ref[...].astype(jnp.float32)
+    pn = pn_ref[...].astype(jnp.float32)         # [BLK_R, 1]
+    valid = valid_ref[...]                       # [BLK_R, A] int32 mask
+    n_eff = n + vl
+    w_eff = w - vl_weight * vl
+    q = w_eff / jnp.maximum(n_eff, 1.0)
+    explore = jnp.sqrt(jnp.log(jnp.maximum(pn, 1.0)) / jnp.maximum(n_eff, 1.0))
+    s = q + cp * explore
+    s = jnp.where(n_eff < 0.5, 1e30, s)          # unvisited -> must explore
+    s = jnp.where(valid > 0, s, NEG_INF)
+    o_ref[...] = jnp.argmax(s, axis=1, keepdims=True).astype(jnp.int32)
+
+
+def uct_argmax_tiles(child_n, child_w, child_vl, parent_n, valid, *,
+                     cp: float, vl_weight: float, blk_r: int = 256,
+                     interpret: bool = False):
+    """All [R, A] (A lane-padded); parent_n [R, 1] -> best index [R, 1] i32."""
+    r, a = child_n.shape
+    nr = pl.cdiv(r, blk_r)
+    kernel = functools.partial(_uct_kernel, cp=cp, vl_weight=vl_weight)
+    row = lambda i: (i, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=(nr,),
+        in_specs=[pl.BlockSpec((blk_r, a), row) for _ in range(3)]
+        + [pl.BlockSpec((blk_r, 1), row), pl.BlockSpec((blk_r, a), row)],
+        out_specs=pl.BlockSpec((blk_r, 1), row),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL,)),
+        interpret=interpret,
+    )(child_n, child_w, child_vl, parent_n, valid)

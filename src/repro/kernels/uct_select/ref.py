@@ -1,0 +1,14 @@
+"""Oracle for the fused UCT argmax — delegates to repro.core.uct scoring."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import uct
+
+
+def uct_argmax_ref(child_n, child_w, child_vl, parent_n, valid, *,
+                   cp: float, vl_weight: float):
+    s = uct.uct_scores(child_n, child_w, child_vl, parent_n, cp,
+                       vl_weight=vl_weight)
+    s = jnp.where(valid, s, uct.NEG_INF)
+    return jnp.argmax(s, axis=-1).astype(jnp.int32)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds abstract params/optimizer/batch/cache
+(ShapeDtypeStruct only — no allocation), resolves shardings from the logical
+rules table, lowers the real step function with pjit in/out shardings,
+compiles it AOT, and records:
+
+  * memory_analysis()  — per-device bytes (proves it fits),
+  * cost_analysis()    — HLO FLOPs / bytes accessed (roofline numerator),
+  * collective schedule + per-device link bytes parsed from the partitioned
+    HLO (roofline collective term).
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out experiments/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, cell_enabled
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_opt_state, batch_axes,
+                                decode_input_specs, opt_state_axes,
+                                prefill_input_specs, train_input_specs)
+from repro.launch.steps import (make_decode_step, make_grad_accum_train_step,
+                                make_prefill_step, make_train_step)
+from repro.models.base import abstract_params, active_param_count, count_params, get_family
+from repro.optim import adamw
+from repro.optim.schedules import constant
+from repro.parallel.sharding import DEFAULT_RULES, active_rules, make_shardings
+
+# Gradient-accumulation microbatches for the train_4k cells: sized so the
+# per-device remat carries (L x B_local/micro x S x D bf16, plus XLA's f32
+# convert copy) fit 16 GB HBM alongside the sharded optimizer state.
+# Per-arch sharding-rule overrides (hillclimb S1): archs whose head count
+# can't split the model axis (smollm 9H, qwen2 14H/2kv, whisper 8H) otherwise
+# run attention REPLICATED over model (useful-flops ratio 0.04-0.16). Letting
+# the batch claim (data, model) makes attention shard-local; weights are
+# all-gathered instead (cheap at these sizes).
+ARCH_RULES_EXTRA = {
+    "smollm-135m": {"batch": (("pod", "data", "model"), ("data", "model"),
+                              ("pod", "data"), ("data",))},
+    "qwen2-0.5b": {"batch": (("pod", "data", "model"), ("data", "model"),
+                             ("pod", "data"), ("data",))},
+    "whisper-base": {"batch": (("pod", "data", "model"), ("data", "model"),
+                               ("pod", "data"), ("data",))},
+    "minicpm-2b": {"batch": (("pod", "data", "model"), ("data", "model"),
+                             ("pod", "data"), ("data",))},
+}
+
+# Hillclimb R1: decode/prefill cells for models whose weights fit replicated
+# (after model-axis TP) drop FSDP storage sharding — training's embed->data
+# sharding makes every decode step all-gather the weights it touches (rwkv6
+# decode_32k measured collective-bound 600x over compute). ~16B+ models keep
+# FSDP (weights don't fit replicated).
+FSDP_ALWAYS = {"grok-1-314b", "deepseek-v2-lite-16b"}
+
+TRAIN_MICROBATCH = {
+    "grok-1-314b": 8,
+    "deepseek-v2-lite-16b": 4,
+    "zamba2-1.2b": 4,
+    # minicpm: no microbatching — its S1 batch-over-(data,model) override
+    # shards B=256 across all 256 chips (1 row/device; carries ~1 GB),
+    # and microbatch slices of 128 would break the 256-way divisibility.
+    "stablelm-3b": 2,
+    "internvl2-2b": 2,
+    "rwkv6-1.6b": 2,
+}
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = float(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def _cost_dict(cost) -> Dict[str, float]:
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals", "utilization operand 0"):
+        if k in cost:
+            out[k.replace(" ", "_")] = float(cost[k])
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh, rules=None) -> Any:
+    """Build + lower the cell's step function. Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    fam = get_family(cfg)
+    if rules is None:
+        rules = dict(DEFAULT_RULES)
+        rules.update(ARCH_RULES_EXTRA.get(arch, {}))
+        if SHAPES[shape_name].kind != "train" and arch not in FSDP_ALWAYS:
+            rules["embed"] = ()          # replicate weights for inference
+
+    params_abs = abstract_params(cfg)
+    axes = fam.param_axes(cfg)
+    pshard = make_shardings(axes, params_abs, mesh)
+    meta = {"params": count_params(params_abs),
+            "active_params": active_param_count(cfg)}
+
+    if shape.kind == "train":
+        opt = adamw()
+        opt_abs = abstract_opt_state(cfg, opt)
+        oshard = make_shardings(opt_state_axes(cfg, opt), opt_abs, mesh, rules)
+        batch = train_input_specs(cfg, shape)
+        micro = TRAIN_MICROBATCH.get(arch, 1)
+        if micro > 1:
+            batch = {k: jax.ShapeDtypeStruct(
+                (micro, v.shape[0] // micro) + v.shape[1:], v.dtype)
+                for k, v in batch.items()}
+            baxes = {k: (None, "batch") + (None,) * (v.ndim - 2)
+                     for k, v in batch.items()}
+            step = make_grad_accum_train_step(cfg, opt, constant(1e-4), micro)
+        else:
+            baxes = batch_axes(cfg, batch)
+            step = make_train_step(cfg, opt, constant(1e-4))
+        bshard = make_shardings(baxes, batch, mesh, rules)
+        jitted = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        with mesh, active_rules(rules):
+            lowered = jitted.lower(params_abs, opt_abs, batch)
+        meta["tokens"] = shape.global_batch * shape.seq_len
+        meta["microbatches"] = micro
+    elif shape.kind == "prefill":
+        batch, cache = prefill_input_specs(cfg, shape)
+        cshard = make_shardings(fam.cache_axes(cfg), cache, mesh, rules)
+        bshard = make_shardings(batch_axes(cfg, batch), batch, mesh, rules)
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard, cshard),
+                         out_shardings=(None, cshard), donate_argnums=(2,))
+        with mesh, active_rules(rules):
+            lowered = jitted.lower(params_abs, batch, cache)
+        meta["tokens"] = shape.global_batch * shape.seq_len
+    else:  # decode
+        cache, tokens = decode_input_specs(cfg, shape)
+        cshard = make_shardings(fam.cache_axes(cfg), cache, mesh, rules)
+        tshard = make_shardings({"t": ("batch", None)}, {"t": tokens}, mesh, rules)["t"]
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step, in_shardings=(pshard, cshard, tshard),
+                         out_shardings=(None, cshard), donate_argnums=(1,))
+        with mesh, active_rules(rules):
+            lowered = jitted.lower(params_abs, cache, tokens)
+        meta["tokens"] = shape.global_batch          # one token per sequence
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules=None, verbose: bool = True) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "devices": n_dev}
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh, rules)
+        rec.update(meta)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 1)
+        rec["compile_s"] = round(t2 - t1, 1)
+        rec["memory"] = _mem_dict(compiled.memory_analysis())
+        rec["cost"] = _cost_dict(compiled.cost_analysis())
+        text = compiled.as_text()
+        costs = hlo_analysis.analyze_module(text, n_dev)   # loop-aware
+        rec["flops_per_device"] = costs.flops
+        rec["hbm_bytes_per_device"] = costs.bytes
+        rec["link_bytes_per_device"] = costs.link_bytes
+        rec["collectives"] = costs.collectives
+        rec["collective_schedule"] = hlo_analysis.schedule_summary(costs.collectives)
+        rec["status"] = "ok"
+        if verbose:
+            mem = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+            arg = rec["memory"].get("argument_size_in_bytes", 0) / 1e9
+            print(f"[ok] {arch:>22s} {shape_name:>12s} {rec['mesh']:>7s} "
+                  f"lower {rec['lower_s']:6.1f}s compile {rec['compile_s']:6.1f}s "
+                  f"args {arg:6.2f}GB temp {mem:6.2f}GB flops/dev {costs.flops:.3e} "
+                  f"hbm/dev {costs.bytes/1e9:7.1f}GB link/dev {costs.link_bytes/1e6:8.1f}MB "
+                  f"| {rec['collective_schedule'][:70]}")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[ERR] {arch} {shape_name} {rec['mesh']}: {rec['error'][:200]}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                if not cell_enabled(arch, shape):
+                    records.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "status": "skipped",
+                                    "reason": "full attention is quadratic at 500k; "
+                                              "run only for SSM/hybrid archs"})
+                    print(f"[skip] {arch} {shape}")
+                    continue
+                records.append(run_cell(arch, shape, mp))
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\ndry-run complete: {n_ok} ok, {n_err} errors, "
+          f"{sum(r['status'] == 'skipped' for r in records)} skipped")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,321 @@
+"""Post-partitioning HLO analysis: loop-aware flops / bytes / collectives.
+
+Parses ``compiled.as_text()`` (per-device SPMD module).  XLA's own
+``cost_analysis()`` counts a ``while`` body ONCE, so anything under a
+``lax.scan`` (layer stacks, CE chunks, blocked attention) is undercounted by
+its trip count.  ``analyze_module`` walks the computation call graph,
+multiplies loop bodies by their trip counts (parsed from the loop condition's
+comparison constant), and reports:
+
+  * dot/convolution FLOPs (the >99% term for transformer workloads),
+  * HBM traffic proxy: every top-level instruction materializes its result
+    at a fusion boundary -> one write + (at least) one read per tensor:
+    bytes = 2 x result bytes, summed over non-trivial top-level ops x trips
+    (operands are NOT summed per-consumer — that would multi-count tensors
+    XLA keeps in registers/VMEM across consumers),
+  * per-device ICI link bytes for collectives with ring accounting:
+
+    all-reduce       2 * size * (g-1)/g     (reduce-scatter + all-gather)
+    all-gather       out_size * (g-1)/g
+    reduce-scatter   in_size  * (g-1)/g     (in = out * g)
+    all-to-all       size * (g-1)/g
+    collective-permute  size
+
+where g = replica-group size parsed from the op attributes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))          # [num_groups, group_size]<=[N]
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        ids = [x for x in first.replace("{", "").split(",") if x.strip()]
+        if ids:
+            return len(ids)
+    return default
+
+
+# ---------------------------------------------------------------------------
+# loop-aware module analysis
+# ---------------------------------------------------------------------------
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?)|\w+\[\])\s*"
+    r"([\w\-]+)\((.*)$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+# ops whose operands/results cross fusion boundaries (HBM traffic proxy)
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "all-reduce", "all-gather",
+    "reduce-scatter", "all-to-all", "collective-permute", "dynamic-slice",
+    "dynamic-update-slice", "slice", "concatenate", "pad", "transpose",
+    "reshape", "copy", "convert", "broadcast", "reduce", "sort", "gather",
+    "scatter", "iota", "rng-bit-generator", "select-and-scatter", "custom-call",
+}
+_SKIP_OPERAND_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                     "bitcast", "while", "call", "conditional", "after-all"}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+@dataclass
+class _Instr:
+    name: str
+    rtype: str
+    op: str
+    rest: str
+    root: bool = False
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Instr]]:
+    comps: Dict[str, List[_Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{"):
+                m = _COMP_HEAD_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(_Instr(m.group(1), m.group(2), m.group(3),
+                                     m.group(4),
+                                     root=line.lstrip().startswith("ROOT")))
+    return comps
+
+
+def _dims(shape_text: str) -> List[List[int]]:
+    return [[int(d) for d in dims.split(",") if d] if dims else []
+            for _, dims in _SHAPE_RE.findall(shape_text)]
+
+
+def _dot_flops(instr: _Instr, sym: Dict[str, str]) -> float:
+    res_dims = _dims(instr.rtype)
+    if not res_dims:
+        return 0.0
+    res_elems = 1
+    for d in res_dims[0]:
+        res_elems *= d
+    m = _CONTRACT_RE.search(instr.rest)
+    operands = _OPERAND_RE.findall(instr.rest.split(")")[0])
+    contract = 1
+    if m and operands:
+        lhs_type = sym.get(operands[0], "")
+        lhs_dims = _dims(lhs_type)
+        if lhs_dims:
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(lhs_dims[0]):
+                    contract *= lhs_dims[0][idx]
+    return 2.0 * res_elems * contract
+
+
+def _trip_count(comp: List[_Instr]) -> int:
+    """Trip count of a scan-style loop: resolve the constant operand of the
+    condition's ROOT compare (possibly via a wrapped-compare fusion)."""
+    by_name = {i.name: i for i in comp}
+    consts = {i.name: int(m.group(1))
+              for i in comp
+              for m in [_CONST_RE.search(i.op + "(" + i.rest)]
+              if i.op == "constant" and m}
+    root = next((i for i in comp if i.root), comp[-1] if comp else None)
+    if root is not None:
+        vals = [consts[o] for o in _OPERAND_RE.findall(root.rest)
+                if o in consts]
+        if vals:
+            return max(max(vals), 1)
+    # fallback: max constant anywhere in the condition
+    return max([1] + list(consts.values()))
+
+
+@dataclass
+class ModuleCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    link_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+
+def analyze_module(text: str, n_devices: int) -> ModuleCosts:
+    comps = _parse_computations(text)
+    syms = {cname: {i.name: i.rtype for i in instrs}
+            for cname, instrs in comps.items()}
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEAD_RE.match(line.replace("ENTRY ", "").strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: last computation
+        entry = list(comps)[-1] if comps else None
+    out = ModuleCosts()
+    coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0})
+    memo: Dict[str, Tuple[float, float, float, Dict]] = {}
+
+    def comp_cost(cname: str) -> Tuple[float, float, float, Dict]:
+        """(flops, bytes, link_bytes, coll dict) for one execution."""
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = (0.0, 0.0, 0.0, {})          # cycle guard
+        fl = by = lk = 0.0
+        cc: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0})
+        sym = syms.get(cname, {})
+        for ins in comps.get(cname, []):
+            op = ins.op
+            if op == "while":
+                m = _COND_BODY_RE.search(ins.rest)
+                if m:
+                    cond, body = m.group(1), m.group(2)
+                    trips = _trip_count(comps.get(cond, []))
+                    bf, bb, bl, bc = comp_cost(body)
+                    fl += trips * bf
+                    by += trips * bb
+                    lk += trips * bl
+                    for k, v in bc.items():
+                        cc[k]["count"] += trips * v["count"]
+                        cc[k]["bytes"] += trips * v["bytes"]
+                        cc[k]["link_bytes"] += trips * v["link_bytes"]
+                continue
+            if op == "call":
+                m = _TO_APPLY_RE.search(ins.rest)
+                if m:
+                    bf, bb, bl, bc = comp_cost(m.group(1))
+                    fl += bf; by += bb; lk += bl
+                    for k, v in bc.items():
+                        for kk in v:
+                            cc[k][kk] += v[kk]
+                continue
+            if op == "conditional":
+                m = _BRANCHES_RE.search(ins.rest)
+                if m:
+                    branches = _OPERAND_RE.findall(m.group(1))
+                    costs = [comp_cost(b) for b in branches]
+                    if costs:
+                        bf, bb, bl, bc = max(costs, key=lambda c: c[0] + c[1])
+                        fl += bf; by += bb; lk += bl
+                continue
+            if op == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    bf, _, _, _ = comp_cost(m.group(1))   # dots inside fusions
+                    fl += bf
+            if op == "dot" or op == "convolution":
+                fl += _dot_flops(ins, sym)
+            if op in COLLECTIVE_OPS or (op.endswith("-start") and
+                                        op[:-6] in COLLECTIVE_OPS):
+                kind = op[:-6] if op.endswith("-start") else op
+                size = _shape_bytes(ins.rtype)
+                g = _group_size(ins.rest, n_devices)
+                ring = (g - 1) / g if g > 1 else 0.0
+                if kind == "all-reduce":
+                    link = 2 * size * ring
+                elif kind == "all-gather":
+                    link = size * ring
+                elif kind == "reduce-scatter":
+                    link = size * g * ring
+                elif kind == "all-to-all":
+                    link = size * ring
+                else:
+                    link = size
+                lk += link
+                cc[kind]["count"] += 1
+                cc[kind]["bytes"] += size
+                cc[kind]["link_bytes"] += link
+            if op in _TRAFFIC_OPS:
+                by += 2 * _shape_bytes(ins.rtype)
+        memo[cname] = (fl, by, lk, dict(cc))
+        return memo[cname]
+
+    fl, by, lk, cc = comp_cost(entry) if entry else (0, 0, 0, {})
+    out.flops, out.bytes, out.link_bytes = fl, by, lk
+    out.collectives = {k: {kk: round(vv, 1) for kk, vv in v.items()}
+                       for k, v in cc.items()}
+    return out
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind: count, result bytes, per-device link bytes."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0, "link_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_text)
+        g = _group_size(line, n_devices)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            link = 2 * size * ring
+        elif kind == "all-gather":
+            link = size * ring
+        elif kind == "reduce-scatter":
+            link = size * g * ring
+        elif kind == "all-to-all":
+            link = size * ring
+        else:  # collective-permute
+            link = size
+        d = out[kind]
+        d["count"] += 1
+        d["bytes"] += size
+        d["link_bytes"] += link
+    return dict(out)
+
+
+def total_link_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(v["link_bytes"] for v in stats.values())
+
+
+def schedule_summary(stats: Dict[str, Dict[str, float]]) -> str:
+    parts = [f"{k}x{int(v['count'])}({v['link_bytes']/1e6:.1f}MB)"
+             for k, v in sorted(stats.items())]
+    return " ".join(parts) if parts else "none"

@@ -1,0 +1,110 @@
+"""Roofline analysis from dry-run records (deliverable g).
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs/device        / peak_FLOPs
+    memory term     = HLO_bytes/device        / HBM_bw
+    collective term = link_bytes/device       / link_bw
+
+(the dry-run's per-device HLO numbers are loop-aware — see hlo_analysis.py).
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (inference);
+``useful ratio`` = MODEL_FLOPS/device / HLO_FLOPs/device catches remat and
+redundant (replicated) compute.  ``roofline frac`` = useful-compute time /
+dominant term — the score the perf loop drives up.
+
+  PYTHONPATH=src python -m repro.launch.roofline experiments/dryrun_16x16.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+
+KIND = {"train_4k": "train", "prefill_32k": "prefill", "decode_32k": "decode",
+        "long_500k": "decode"}
+
+
+def model_flops(rec: Dict[str, Any]) -> float:
+    n_act = rec.get("active_params", rec.get("params", 0))
+    toks = rec.get("tokens", 0)
+    kind = KIND.get(rec["shape"], "train")
+    per_token = 6 * n_act if kind == "train" else 2 * n_act
+    return per_token * toks
+
+
+def analyze(rec: Dict[str, Any]) -> Dict[str, Any]:
+    dev = rec["devices"]
+    fl = rec.get("flops_per_device", 0.0)
+    by = rec.get("hbm_bytes_per_device", 0.0)
+    lk = rec.get("link_bytes_per_device", 0.0)
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_l = lk / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))
+    mf = model_flops(rec) / dev
+    useful = mf / fl if fl else 0.0
+    frac = (mf / PEAK_FLOPS) / dom[0] if dom[0] else 0.0
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_l,
+            "dominant": dom[1], "model_flops_dev": mf,
+            "useful_ratio": useful, "roofline_frac": frac}
+
+
+def suggestion(rec, a) -> str:
+    if a["dominant"] == "collective":
+        top = max(rec.get("collectives", {"?": {"link_bytes": 0}}).items(),
+                  key=lambda kv: kv[1].get("link_bytes", 0))[0]
+        return f"cut {top} volume (sharding/overlap)"
+    if a["dominant"] == "memory":
+        return "reduce HBM traffic (fusion, dtype, remat policy)"
+    if a["useful_ratio"] < 0.4:
+        return "remove redundant compute (replicated attention / remat)"
+    return "compute-bound at good utilization; overlap remaining comm"
+
+
+def table(records: List[Dict[str, Any]]) -> str:
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s | "
+            "dominant | useful | roofline frac | next lever |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for rec in records:
+        if rec.get("status") == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                        f"— | — | — | skipped | — | — | {rec['reason'][:42]} |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                        f"ERR | | | | | | {rec.get('error', '')[:40]} |")
+            continue
+        a = analyze(rec)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {a['t_compute']:.3e} | {a['t_memory']:.3e} "
+            f"| {a['t_collective']:.3e} | **{a['dominant']}** "
+            f"| {a['useful_ratio']:.2f} | {a['roofline_frac']:.3f} "
+            f"| {suggestion(rec, a)} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_files", nargs="+")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    records = []
+    for f in args.json_files:
+        with open(f) as fh:
+            records.extend(json.load(fh))
+    md = table(records)
+    print(md)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+No device allocation: params via jax.eval_shape over init, batches as
+ShapeDtypeStructs, caches via eval_shape over init_cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.base import ModelConfig, abstract_params, get_family
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "whisper":
+        return {"frames": _sds((b, cfg.enc_seq, cfg.d_model), cfg.jdtype),
+                "tokens": _sds((b, s), I32), "labels": _sds((b, s), I32)}
+    if cfg.family == "vlm":
+        s_txt = s - cfg.n_patches
+        return {"patches": _sds((b, cfg.n_patches, cfg.frontend_dim), cfg.jdtype),
+                "tokens": _sds((b, s_txt), I32), "labels": _sds((b, s), I32)}
+    return {"tokens": _sds((b, s), I32), "labels": _sds((b, s), I32)}
+
+
+def batch_axes(cfg: ModelConfig, batch: Dict[str, Any]) -> Dict[str, Tuple]:
+    return {k: ("batch",) + (None,) * (v.ndim - 1) for k, v in batch.items()}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    fam = get_family(cfg)
+    cache = jax.eval_shape(lambda: fam.init_cache(cfg, b, s))
+    if cfg.family == "whisper":
+        batch = {"frames": _sds((b, cfg.enc_seq, cfg.d_model), cfg.jdtype),
+                 "tokens": _sds((b, s), I32)}
+    else:
+        batch = {"tokens": _sds((b, s), I32)}
+    return batch, cache
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    fam = get_family(cfg)
+    cache = jax.eval_shape(lambda: fam.init_cache(cfg, b, s))
+    tokens = _sds((b, 1), I32)
+    return cache, tokens
+
+
+def abstract_opt_state(cfg: ModelConfig, optimizer) -> Any:
+    params = abstract_params(cfg)
+    return jax.eval_shape(optimizer.init, params)
+
+
+def opt_state_axes(cfg: ModelConfig, optimizer) -> Any:
+    """Optimizer-state logical axes: m/v mirror the param axes; step=None."""
+    fam = get_family(cfg)
+    axes = fam.param_axes(cfg)
+    state = abstract_opt_state(cfg, optimizer)
+    is_axes = lambda x: x is None or (isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x))
+
+    def mirror(sub):
+        if isinstance(sub, dict) and "step" in sub:
+            pass
+        return sub
+
+    out = {}
+    for k, v in state.items():
+        if k == "step":
+            out[k] = None
+        else:
+            out[k] = axes
+    return out

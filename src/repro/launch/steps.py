@@ -1,0 +1,88 @@
+"""Step factories: train_step / prefill_step / decode_step for any arch.
+
+These are the functions the dry-run lowers and the drivers execute; they are
+pure (params, state, batch) -> (new state, metrics) and rely on
+with_logical_constraint for activation sharding under an active mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, get_family
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+from repro.parallel.sharding import with_logical_constraint
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    schedule: Callable, grad_clip: float = 1.0,
+                    compress_grads: Optional[Callable] = None):
+    fam = get_family(cfg)
+
+    def train_step(params, opt_state, batch):
+        batch = {k: with_logical_constraint(v, ("batch",) + (None,) * (v.ndim - 1))
+                 for k, v in batch.items()}
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: fam.loss_fn(cfg, p, batch), has_aux=True)(params)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = schedule(opt_state["step"])
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        metrics = {"loss": aux["loss"], "grad_norm": gnorm, "lr": lr}
+        if "aux_loss" in aux:
+            metrics["aux_loss"] = aux["aux_loss"]
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_grad_accum_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                               schedule: Callable, n_micro: int,
+                               grad_clip: float = 1.0):
+    """Gradient accumulation over n_micro microbatches (scan over leading dim)."""
+    fam = get_family(cfg)
+
+    def train_step(params, opt_state, batch):
+        # batch leaves have shape [n_micro, micro_batch, ...]
+        def micro(accum, mb):
+            (loss, aux), g = jax.value_and_grad(
+                lambda p: fam.loss_fn(cfg, p, mb), has_aux=True)(params)
+            accum = jax.tree_util.tree_map(lambda a, b: a + b, accum, g)
+            return accum, loss
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, losses = jax.lax.scan(micro, zeros, batch)
+        grads = jax.tree_util.tree_map(lambda g: (g / n_micro).astype(cfg.jdtype), grads)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = schedule(opt_state["step"])
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": losses.mean(), "grad_norm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    fam = get_family(cfg)
+
+    def prefill_step(params, batch, cache):
+        if cfg.family == "whisper":
+            return fam.prefill(cfg, params, batch, cache)
+        return fam.prefill(cfg, params, batch["tokens"], cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    fam = get_family(cfg)
+
+    def decode_step(params, cache, tokens):
+        return fam.decode_step(cfg, params, cache, tokens)
+
+    return decode_step

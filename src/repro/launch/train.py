@@ -1,0 +1,88 @@
+"""Training driver: data pipeline + optimizer + FT loop + checkpoints.
+
+CPU-runnable end-to-end with ``--smoke`` (reduced same-family configs); the
+full configs are exercised via launch/dryrun.py on the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import DataConfig, Prefetcher, make_batch_iterator
+from repro.launch.steps import make_train_step
+from repro.models.base import count_params, get_family
+from repro.optim import adamw, lion
+from repro.optim.schedules import cosine, wsd
+from repro.runtime.ft import FTConfig, TrainerLoop
+
+
+def build(arch: str, smoke: bool, batch: int, seq: int, lr: float,
+          steps: int, optimizer: str = "adamw"):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    fam = get_family(cfg)
+    opt = {"adamw": adamw, "lion": lion}[optimizer]()
+    # MiniCPM pairs with WSD (its paper's contribution); others cosine
+    sched = (wsd(lr, warmup=max(steps // 20, 1), stable=steps // 2,
+                 decay=max(steps // 3, 1))
+             if arch.startswith("minicpm") else
+             cosine(lr, warmup=max(steps // 20, 1), total=steps))
+    step_fn = jax.jit(make_train_step(cfg, opt, sched), donate_argnums=(0, 1))
+    params = fam.init(cfg, jax.random.key(0))
+    opt_state = opt.init(params)
+    dcfg = DataConfig(seed=0, batch_size=batch, seq_len=seq)
+    return cfg, step_fn, params, opt_state, dcfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg, step_fn, params, opt_state, dcfg = build(
+        args.arch, args.smoke, args.batch, args.seq, args.lr, args.steps,
+        args.optimizer)
+    print(f"arch={cfg.name} params={count_params(params):,} "
+          f"batch={args.batch}x{args.seq}")
+
+    ft = FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    loop = TrainerLoop(
+        step_fn, params, opt_state,
+        lambda start: Prefetcher(make_batch_iterator(cfg, dcfg, start)), ft)
+    if loop.try_restore():
+        print(f"restored from step {loop.step}")
+
+    t0 = time.time()
+    last = t0
+    start = loop.step
+    while loop.step < args.steps:
+        n = min(args.log_every, args.steps - loop.step)
+        out = loop.run(n)
+        now = time.time()
+        tput = n * args.batch * args.seq / (now - last)
+        last = now
+        print(f"step {loop.step:5d} loss {out['losses'][-1]:.4f} "
+              f"tok/s {tput:,.0f}")
+    wall = time.time() - t0
+    print(f"done: {loop.step - start} steps in {wall:.1f}s; "
+          f"final loss {loop.history[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

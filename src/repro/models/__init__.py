@@ -1,0 +1,8 @@
+from repro.models.base import (  # noqa: F401
+    ModelConfig,
+    abstract_params,
+    active_param_count,
+    count_params,
+    get_family,
+    register_family,
+)

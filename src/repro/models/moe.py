@@ -1,0 +1,542 @@
+"""Mixture-of-Experts transformer family.
+
+Covers:
+* deepseek-v2-lite-16b — MLA attention (kv_lora latent cache, decoupled rope),
+  64 routed experts top-6 + 2 shared experts, leading dense layer(s);
+* grok-1-314b         — GQA attention with tanh logit soft-cap, 8 experts top-2.
+
+Expert dispatch is the dropped-token (E, C)-buffer pattern (GShard-style):
+exact activated-FLOPs accounting, shardable experts axis (EP when divisible),
+no [T, E, C] one-hot tensors.  ``moe_impl='ragged'`` switches to a dropless
+sort + ``lax.ragged_dot`` path (perf-iteration alternative).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig, register_family
+
+
+# ---------------------------------------------------------------------------
+# router + expert FFN
+# ---------------------------------------------------------------------------
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(cfg.moe_capacity * n_tokens * cfg.moe_topk / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def router_probs(cfg: ModelConfig, p, x2d):
+    logits = (x2d.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)                      # [N, E] fp32
+
+
+def moe_ffn(cfg: ModelConfig, p, x2d):
+    """x2d [N, D] -> (y [N, D], aux_loss scalar). Dropped-token dispatch."""
+    from repro.parallel.sharding import with_logical_constraint
+    x2d = with_logical_constraint(x2d, ("batch", None))
+    n, d = x2d.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+    gates = router_probs(cfg, p, x2d)                           # [N, E]
+    topv, topi = jax.lax.top_k(gates, k)                        # [N, K]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    inv_n = 1.0 / n
+    p_mean = gates.mean(0)                                       # [E]
+    f_e = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(inv_n / k)
+    aux = cfg.router_aux_coef * e * jnp.sum(f_e * p_mean)
+
+    if cfg.moe_impl == "ragged":
+        y = _ragged_ffn(cfg, p, x2d, topi, topv)
+        return y, aux
+
+    if cfg.moe_impl == "ep":
+        from repro.parallel.ep_dispatch import ep_moe_ffn
+        from repro.parallel.sharding import _current_mesh
+        mesh = _current_mesh()
+        if mesh is not None and not mesh.empty and "model" in mesh.axis_names \
+                and cfg.n_experts % mesh.shape["model"] == 0:
+            y = ep_moe_ffn(x2d, p, mesh, topk=cfg.moe_topk,
+                           capacity_factor=cfg.moe_capacity)
+            return y, aux
+        # no usable mesh: fall through to the SPMD grouped dispatch
+
+    # ---- grouped (G, E, C) buffer dispatch (GShard-style) ----
+    # Tokens are split into G groups aligned with the data axis; the
+    # position-in-expert cumsum is per group, so dispatch is shard-local
+    # (no cross-device prefix sums) and capacity buffers shard over data.
+    g = max(1, min(cfg.moe_groups, n))
+    while n % g:
+        g //= 2
+    ng = n // g                                                  # tokens/group
+    c = _capacity(cfg, ng)
+    e_flat = topi.reshape(g, ng * k)                             # [G, Nk]
+    w_flat = topv.reshape(g, ng * k).astype(x2d.dtype)
+    xg = x2d.reshape(g, ng, d)
+    tok = jnp.arange(ng * k) // k
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)          # [G, Nk, E]
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, 1) - onehot,
+                              e_flat[..., None], axis=2)[..., 0]  # [G, Nk]
+    keep = pos < c
+
+    # scatter/gather one top-k slot at a time, with the group axis as a vmap
+    # BATCH dim — intermediates stay [G, ng, D], and the scatter/gather carry
+    # no explicit G index, so XLA partitions them trivially along the data
+    # axis (no cross-shard all-reduce; see EXPERIMENTS §Perf iters D1/D2).
+    buf = jnp.zeros((g, e, c, d), x2d.dtype)
+    scatter = jax.vmap(lambda b, ei, pi, xi: b.at[ei, pi].add(xi, mode="drop"))
+    for j in range(k):
+        e_j, pos_j, keep_j = e_flat[:, j::k], pos[:, j::k], keep[:, j::k]
+        pos_j = jnp.where(keep_j, pos_j, c)                      # OOB -> drop
+        buf = scatter(buf, e_j, pos_j, xg)
+    buf = with_logical_constraint(buf, ("batch", "experts", None, None))
+
+    # bf16 einsum outputs: the MXU accumulates f32 internally; keeping the
+    # OUTPUT (and hence the bwd cotangents / gradient all-reduces) in bf16
+    # halves the dominant collective volume (EXPERIMENTS §Perf G2).
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+                    .astype(jnp.float32)).astype(x2d.dtype)
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["wu"])
+    y_buf = jnp.einsum("gecf,efd->gecd", h, p["wd"])             # [G, E, C, D]
+    y_buf = with_logical_constraint(y_buf, ("batch", "experts", None, None))
+
+    gather = jax.vmap(lambda yb, ei, pi: yb[ei, pi])
+    y = jnp.zeros((g, ng, d), x2d.dtype)
+    for j in range(k):
+        e_j, pos_j, keep_j = e_flat[:, j::k], pos[:, j::k], keep[:, j::k]
+        got = gather(y_buf, e_j, jnp.minimum(pos_j, c - 1))      # [G, ng, D]
+        y = y + jnp.where(keep_j[..., None], got, 0) * w_flat[:, j::k, None]
+    return y.reshape(n, d), aux
+
+
+def _ragged_ffn(cfg: ModelConfig, p, x2d, topi, topv):
+    """Dropless dispatch: sort token-slots by expert, grouped matmul."""
+    n, d = x2d.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+    e_flat = topi.reshape(-1)
+    order = jnp.argsort(e_flat)                                  # [NK]
+    tok_sorted = (jnp.arange(n * k) // k)[order]
+    xs = x2d[tok_sorted]                                         # [NK, D]
+    group_sizes = jnp.bincount(e_flat, length=e).astype(jnp.int32)
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, p["wg"], group_sizes).astype(jnp.float32)).astype(x2d.dtype)
+    h = h * jax.lax.ragged_dot(xs, p["wu"], group_sizes)
+    ys = jax.lax.ragged_dot(h, p["wd"], group_sizes)
+    w_sorted = topv.reshape(-1)[order].astype(x2d.dtype)
+    out = jnp.zeros((n, d), x2d.dtype).at[tok_sorted].add(ys * w_sorted[:, None])
+    return out
+
+
+def init_moe_ffn(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], (d, e), jnp.float32),
+        "wg": L.dense_init(ks[1], (e, d, f), cfg.jdtype, in_axis=1),
+        "wu": L.dense_init(ks[2], (e, d, f), cfg.jdtype, in_axis=1),
+        "wd": L.dense_init(ks[3], (e, f, d), cfg.jdtype, in_axis=1),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff_expert * cfg.n_shared_experts
+        p["shared"] = L.init_mlp(cfg, ks[4], d_ff=fs)
+    return p
+
+
+def apply_moe_block_ffn(cfg: ModelConfig, p, x):
+    b, s, d = x.shape
+    y, aux = moe_ffn(cfg, p, x.reshape(b * s, d))
+    if "shared" in p:
+        y = y + L.apply_mlp(cfg, p["shared"], x).reshape(b * s, d)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (deepseek-v2)
+# ---------------------------------------------------------------------------
+def init_mla(cfg: ModelConfig, key):
+    d, h = cfg.d_model, cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": L.dense_init(ks[0], (d, h * qd), cfg.jdtype),
+        "wdkv": L.dense_init(ks[1], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), cfg.jdtype),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), cfg.jdtype),
+        "wuk": L.dense_init(ks[2], (cfg.kv_lora_rank, h * cfg.qk_nope_dim), cfg.jdtype),
+        "wuv": L.dense_init(ks[3], (cfg.kv_lora_rank, h * cfg.v_head_dim), cfg.jdtype),
+        "wo": L.dense_init(ks[4], (h * cfg.v_head_dim, d), cfg.jdtype),
+    }
+
+
+def mla_latents(cfg: ModelConfig, p, x, positions):
+    """x [B,S,D] -> (c_kv [B,S,R], k_rope [B,S,1,rope]) with rope applied."""
+    b, s, _ = x.shape
+    dkv = x @ p["wdkv"]
+    c_kv = L.rmsnorm(dkv[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = dkv[..., cfg.kv_lora_rank:].reshape(b, s, 1, cfg.qk_rope_dim)
+    cos, sin = L.rope_freqs(cfg, positions, rot_dim=cfg.qk_rope_dim)
+    k_rope = L.apply_rope(k_rope, cos, sin)
+    return c_kv, k_rope
+
+
+def mla_queries(cfg: ModelConfig, p, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = (x @ p["wq"]).reshape(b, s, h, qd)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    cos, sin = L.rope_freqs(cfg, positions, rot_dim=cfg.qk_rope_dim)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_attention_full(cfg: ModelConfig, p, x, positions, *, causal=True):
+    """Training/prefill path: materialize per-head K,V from the latent."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = mla_queries(cfg, p, x, positions)
+    c_kv, k_rope = mla_latents(cfg, p, x, positions)
+    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, cfg.qk_nope_dim)
+    v = (c_kv @ p["wuv"]).reshape(b, s, h, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope_dim))], -1)
+    attn = L.attention(cfg, q, k, v, causal=causal,
+                       logits_soft_cap=cfg.logits_soft_cap)
+    return attn.reshape(b, s, h * cfg.v_head_dim) @ p["wo"], (c_kv, k_rope)
+
+
+def mla_attention_absorbed(cfg: ModelConfig, p, x, pos, c_kv_cache, k_rope_cache,
+                           kv_valid_len):
+    """Decode path: attend in the latent space (weight-absorbed, O(R) cache).
+
+    x [B,1,D]; c_kv_cache [B,S,R]; k_rope_cache [B,S,rope].
+    """
+    b = x.shape[0]
+    h, r = cfg.n_heads, cfg.kv_lora_rank
+    q_nope, q_rope = mla_queries(cfg, p, x, pos[:, None])        # [B,1,H,*]
+    # absorb W_uk into the query: score_nope = (q_nope W_uk^T) . c_kv
+    wuk = p["wuk"].reshape(r, h, cfg.qk_nope_dim)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wuk)            # [B,1,H,R]
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    s_nope = jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv_cache,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhe,bke->bhqk", q_rope, k_rope_cache,
+                        preferred_element_type=jnp.float32)
+    logits = (s_nope + s_rope) * scale
+    if cfg.logits_soft_cap > 0:
+        logits = cfg.logits_soft_cap * jnp.tanh(logits / cfg.logits_soft_cap)
+    kpos = jnp.arange(c_kv_cache.shape[1])[None, :]
+    keep = kpos < kv_valid_len[:, None]
+    logits = jnp.where(keep[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv_cache)      # [B,1,H,R]
+    wuv = p["wuv"].reshape(r, h, cfg.v_head_dim)
+    o = jnp.einsum("bqhr,rhv->bqhv", o_lat, wuv)                 # [B,1,H,V]
+    return o.reshape(b, 1, h * cfg.v_head_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# blocks / init
+# ---------------------------------------------------------------------------
+def _init_attn(cfg: ModelConfig, key):
+    return init_mla(cfg, key) if cfg.use_mla else L.init_gqa(cfg, key)
+
+
+def _init_moe_block(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    return {"ln1": L.init_norm(cfg, ks[0]), "attn": _init_attn(cfg, ks[1]),
+            "ln2": L.init_norm(cfg, ks[2]), "moe": init_moe_ffn(cfg, ks[3])}
+
+
+def _init_dense_block(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    return {"ln1": L.init_norm(cfg, ks[0]), "attn": _init_attn(cfg, ks[1]),
+            "ln2": L.init_norm(cfg, ks[2]),
+            "mlp": L.init_mlp(cfg, ks[3], d_ff=cfg.d_ff_dense or cfg.d_ff)}
+
+
+def init(cfg: ModelConfig, key):
+    k_emb, k_dense, k_layers, k_final = jax.random.split(key, 4)
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    stacked = jax.vmap(lambda k: _init_moe_block(cfg, k))(jax.random.split(k_layers, n_moe))
+    p = {"embed": L.init_embed(cfg, k_emb), "layers": stacked,
+         "final_norm": L.init_norm(cfg, k_final)}
+    if cfg.first_dense_layers:
+        p["dense_layers"] = [
+            _init_dense_block(cfg, k)
+            for k in jax.random.split(k_dense, cfg.first_dense_layers)]
+    return p
+
+
+def param_axes(cfg: ModelConfig):
+    if cfg.use_mla:
+        attn = {"wq": ("embed", "heads"), "wdkv": ("embed", None),
+                "kv_norm": (None,), "wuk": (None, "heads"),
+                "wuv": (None, "heads"), "wo": ("heads", "embed")}
+    else:
+        attn = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+                "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+        if cfg.qkv_bias:
+            attn.update({"bq": ("heads",), "bk": ("kv",), "bv": ("kv",)})
+    moe = {"router": ("embed", None),
+           "wg": ("experts", "embed", "mlp"), "wu": ("experts", "embed", "mlp"),
+           "wd": ("experts", "mlp", "embed")}
+    if cfg.n_shared_experts:
+        moe["shared"] = {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+                         "wd": ("mlp", "embed")}
+    norm = {"scale": (None,)}
+    blk = {"ln1": dict(norm), "attn": attn, "ln2": dict(norm), "moe": moe}
+    stack = jax.tree_util.tree_map(lambda ax: ("layers",) + ax, blk,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    emb = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        emb["head"] = ("embed", "vocab")
+    out = {"embed": emb, "layers": stack, "final_norm": dict(norm)}
+    if cfg.first_dense_layers:
+        dblk = {"ln1": dict(norm), "attn": dict(attn), "ln2": dict(norm),
+                "mlp": {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+                        "wd": ("mlp", "embed")}}
+        out["dense_layers"] = [dblk for _ in range(cfg.first_dense_layers)]
+    return out
+
+
+def inactive_expert_params(cfg: ModelConfig) -> int:
+    """Params NOT activated per token (for 6*N_active*D accounting)."""
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    return n_moe_layers * (cfg.n_experts - cfg.moe_topk) * per_expert
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _attn_full(cfg: ModelConfig, p, x, positions):
+    if cfg.use_mla:
+        out, _ = mla_attention_full(cfg, p, x, positions)
+        return out
+    b, s, _ = x.shape
+    q, k, v = L.gqa_project_qkv(cfg, p, x)
+    cos, sin = L.rope_freqs(cfg, positions)
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    attn = L.attention(cfg, q, k, v, causal=True,
+                       logits_soft_cap=cfg.logits_soft_cap)
+    return attn.reshape(b, s, -1) @ p["wo"]
+
+
+def _moe_block_fwd(cfg: ModelConfig, lp, x, positions):
+    from repro.parallel.sharding import with_logical_constraint
+    x = with_logical_constraint(x, ("batch", None, None))
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    x = x + _attn_full(cfg, lp["attn"], h, positions)
+    h = L.apply_norm(cfg, lp["ln2"], x)
+    y, aux = apply_moe_block_ffn(cfg, lp["moe"], h)
+    return x + y, aux
+
+
+def _dense_block_fwd(cfg: ModelConfig, lp, x, positions):
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    x = x + _attn_full(cfg, lp["attn"], h, positions)
+    h = L.apply_norm(cfg, lp["ln2"], x)
+    return x + L.apply_mlp(cfg, lp["mlp"], h)
+
+
+def hidden_states(cfg: ModelConfig, params, tokens=None, inputs_embeds=None):
+    x = inputs_embeds if inputs_embeds is not None else L.embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.arange(x.shape[1])
+    for lp in params.get("dense_layers", []):
+        x = _dense_block_fwd(cfg, lp, x, positions)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _moe_block_fwd(cfg, lp, x, positions)
+        if cfg.seq_shard_carry:
+            from repro.parallel.sharding import with_logical_constraint
+            x = with_logical_constraint(x, ("batch", "act_seq", None))
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    return L.apply_norm(cfg, params["final_norm"], x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rng=None):
+    x, aux = hidden_states(cfg, params, tokens=batch["tokens"])
+    ce = L.chunked_softmax_xent(cfg, params["embed"], x, batch["labels"],
+                                batch.get("mask"))
+    return ce + aux, {"loss": ce, "aux_loss": aux}
+
+
+def logits_fn(cfg: ModelConfig, params, tokens):
+    x, _ = hidden_states(cfg, params, tokens=tokens)
+    return L.lm_head(cfg, params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# inference
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.jdtype
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    if cfg.use_mla:
+        cache = {
+            "ckv": jnp.zeros((cfg.n_layers, batch_size, max_seq, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((cfg.n_layers, batch_size, max_seq, cfg.qk_rope_dim), dtype),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+    else:
+        kv = (cfg.n_layers, batch_size, max_seq, cfg.kv_heads, cfg.head_dim)
+        cache = {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+                 "pos": jnp.zeros((batch_size,), jnp.int32)}
+    return cache
+
+
+def cache_axes(cfg: ModelConfig):
+    if cfg.use_mla:
+        return {"ckv": ("layers", "batch", "kv_seq", None),
+                "krope": ("layers", "batch", "kv_seq", None),
+                "pos": ("batch",)}
+    return {"k": ("layers", "batch", "kv_seq", "kv", None),
+            "v": ("layers", "batch", "kv_seq", "kv", None),
+            "pos": ("batch",)}
+
+
+def _split_cache(cache, n_dense):
+    """Split stacked cache arrays into (dense prefix list, moe stacked)."""
+    dense = [jax.tree_util.tree_map(lambda a: a[i], {k: v for k, v in cache.items() if k != "pos"})
+             for i in range(n_dense)]
+    moe = {k: v[n_dense:] for k, v in cache.items() if k != "pos"}
+    return dense, moe
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache):
+    b, s = tokens.shape
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.arange(s)
+    new_layers = []
+    for lp in params.get("dense_layers", []):
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        if cfg.use_mla:
+            out, (ckv, krope) = mla_attention_full(cfg, lp["attn"], h, positions)
+            new_layers.append({"ckv": ckv, "krope": krope[:, :, 0]})
+            x = x + out
+        else:
+            q, k, v = L.gqa_project_qkv(cfg, lp["attn"], h)
+            cos, sin = L.rope_freqs(cfg, positions)
+            q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+            attn = L.attention(cfg, q, k, v, causal=True,
+                               logits_soft_cap=cfg.logits_soft_cap)
+            new_layers.append({"k": k, "v": v})
+            x = x + attn.reshape(b, s, -1) @ lp["attn"]["wo"]
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        x = x + L.apply_mlp(cfg, lp["mlp"], h)
+
+    def body(carry, lp):
+        x = carry
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        if cfg.use_mla:
+            out, (ckv, krope) = mla_attention_full(cfg, lp["attn"], h, positions)
+            kv = {"ckv": ckv, "krope": krope[:, :, 0]}
+            x = x + out
+        else:
+            q, k, v = L.gqa_project_qkv(cfg, lp["attn"], h)
+            cos, sin = L.rope_freqs(cfg, positions)
+            q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+            attn = L.attention(cfg, q, k, v, causal=True,
+                               logits_soft_cap=cfg.logits_soft_cap)
+            kv = {"k": k, "v": v}
+            x = x + attn.reshape(b, s, -1) @ lp["attn"]["wo"]
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        y, _ = apply_moe_block_ffn(cfg, lp["moe"], h)
+        return x + y, kv
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    x, kvs = jax.lax.scan(body_fn, x, params["layers"])
+
+    cache = dict(cache)
+    for name in [k for k in cache if k != "pos"]:
+        stacked = kvs[name]
+        if new_layers:
+            head = jnp.stack([nl[name] for nl in new_layers])
+            stacked = jnp.concatenate([head, stacked], 0)
+        pad = [(0, 0)] * stacked.ndim
+        pad[2] = (0, cache[name].shape[2] - s)
+        cache[name] = jax.lax.dynamic_update_slice(
+            cache[name], stacked.astype(cache[name].dtype),
+            (0,) * cache[name].ndim)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.lm_head(cfg, params["embed"], x[:, -1:]), cache
+
+
+def _decode_attn(cfg, lp, x, pos, lc, valid):
+    """One-token attention against this layer's cache slice; returns (out, new lc)."""
+    b = x.shape[0]
+    if cfg.use_mla:
+        dkv = x @ lp["attn"]["wdkv"]
+        ckv_new = L.rmsnorm(dkv[..., : cfg.kv_lora_rank], lp["attn"]["kv_norm"])
+        kr = dkv[..., cfg.kv_lora_rank:].reshape(b, 1, 1, cfg.qk_rope_dim)
+        cos, sin = L.rope_freqs(cfg, pos[:, None], rot_dim=cfg.qk_rope_dim)
+        kr = L.apply_rope(kr, cos, sin)[:, 0, 0]
+        ckv = lc["ckv"].at[jnp.arange(b), pos].set(ckv_new[:, 0].astype(lc["ckv"].dtype))
+        krope = lc["krope"].at[jnp.arange(b), pos].set(kr.astype(lc["krope"].dtype))
+        out = mla_attention_absorbed(cfg, lp["attn"], x, pos, ckv, krope, valid)
+        return out, {"ckv": ckv, "krope": krope}
+    q, k, v = L.gqa_project_qkv(cfg, lp["attn"], x)
+    cos, sin = L.rope_freqs(cfg, pos[:, None])
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    ck = lc["k"].at[jnp.arange(b), pos].set(k[:, 0].astype(lc["k"].dtype))
+    cv = lc["v"].at[jnp.arange(b), pos].set(v[:, 0].astype(lc["v"].dtype))
+    attn = L.attention(cfg, q, ck, cv, causal=False, kv_valid_len=valid,
+                       logits_soft_cap=cfg.logits_soft_cap)
+    return attn.reshape(b, 1, -1) @ lp["attn"]["wo"], {"k": ck, "v": cv}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    valid = pos + 1
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    n_dense = cfg.first_dense_layers
+    kv_names = [k for k in cache if k != "pos"]
+    new_dense = []
+    for i, lp in enumerate(params.get("dense_layers", [])):
+        lc = {name: cache[name][i] for name in kv_names}
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        out, nlc = _decode_attn(cfg, lp, h, pos, lc, valid)
+        x = x + out
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        x = x + L.apply_mlp(cfg, lp["mlp"], h)
+        new_dense.append(nlc)
+
+    def body(carry, xs):
+        x = carry
+        lp = xs[0]
+        lc = {name: xs[1 + j] for j, name in enumerate(kv_names)}
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        out, nlc = _decode_attn(cfg, lp, h, pos, lc, valid)
+        x = x + out
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        y, _ = apply_moe_block_ffn(cfg, lp["moe"], h)
+        return x + y, tuple(nlc[name] for name in kv_names)
+
+    moe_cache = tuple(cache[name][n_dense:] for name in kv_names)
+    x, new_moe = jax.lax.scan(body, x, (params["layers"],) + moe_cache)
+
+    cache = dict(cache)
+    for j, name in enumerate(kv_names):
+        stacked = new_moe[j]
+        if new_dense:
+            head = jnp.stack([nd[name] for nd in new_dense])
+            stacked = jnp.concatenate([head, stacked], 0)
+        cache[name] = stacked
+    cache["pos"] = pos + 1
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.lm_head(cfg, params["embed"], x), cache
+
+
+register_family("moe")(__import__("sys").modules[__name__])

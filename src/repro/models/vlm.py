@@ -1,0 +1,92 @@
+"""InternVL2-style VLM (arXiv:2404.16821): stub ViT frontend + LM backbone.
+
+The vision tower is a STUB per assignment: ``input_specs()`` provides
+precomputed patch features [B, n_patches, frontend_dim] (InternViT outputs).
+This module owns the real LM-side pieces: the 2-layer MLP projector ("mlp1")
+and the InternLM2 decoder backbone (dense family re-used).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as dense
+from repro.models.base import ModelConfig, register_family
+
+
+def init(cfg: ModelConfig, key):
+    k_lm, k_p = jax.random.split(key)
+    ks = jax.random.split(k_p, 2)
+    fd = cfg.frontend_dim or cfg.d_model
+    p = dense.init(cfg, k_lm)
+    p["projector"] = {
+        "ln": {"scale": jnp.ones((fd,), cfg.jdtype), "bias": jnp.zeros((fd,), cfg.jdtype)},
+        "w1": L.dense_init(ks[0], (fd, cfg.d_model), cfg.jdtype),
+        "b1": jnp.zeros((cfg.d_model,), cfg.jdtype),
+        "w2": L.dense_init(ks[1], (cfg.d_model, cfg.d_model), cfg.jdtype),
+        "b2": jnp.zeros((cfg.d_model,), cfg.jdtype),
+    }
+    return p
+
+
+def param_axes(cfg: ModelConfig):
+    ax = dense.param_axes(cfg)
+    ax["projector"] = {
+        "ln": {"scale": (None,), "bias": (None,)},
+        "w1": (None, "embed"), "b1": ("embed",),
+        "w2": ("embed", "embed"), "b2": ("embed",),
+    }
+    return ax
+
+
+def project_patches(cfg: ModelConfig, params, patches):
+    p = params["projector"]
+    x = L.layernorm(patches, p["ln"]["scale"], p["ln"]["bias"])
+    x = jax.nn.gelu((x @ p["w1"] + p["b1"]).astype(jnp.float32)).astype(patches.dtype)
+    return x @ p["w2"] + p["b2"]
+
+
+def multimodal_embeds(cfg: ModelConfig, params, patches, tokens):
+    img = project_patches(cfg, params, patches)              # [B,P,D]
+    txt = L.embed_tokens(cfg, params["embed"], tokens)       # [B,St,D]
+    return jnp.concatenate([img, txt], axis=1)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rng=None):
+    """batch: patches [B,P,fd], tokens [B,St], labels [B,P+St] (-mask img pos)."""
+    embeds = multimodal_embeds(cfg, params, batch["patches"], batch["tokens"])
+    x = dense.hidden_states(cfg, params, inputs_embeds=embeds)
+    n_img = batch["patches"].shape[1]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.concatenate([
+            jnp.zeros((x.shape[0], n_img), jnp.float32),
+            jnp.ones((x.shape[0], x.shape[1] - n_img), jnp.float32)], axis=1)
+    loss = L.chunked_softmax_xent(cfg, params["embed"], x, batch["labels"], mask)
+    return loss, {"loss": loss}
+
+
+def logits_fn(cfg: ModelConfig, params, tokens):
+    return dense.logits_fn(cfg, params, tokens)
+
+
+def multimodal_logits(cfg: ModelConfig, params, patches, tokens):
+    embeds = multimodal_embeds(cfg, params, patches, tokens)
+    x = dense.hidden_states(cfg, params, inputs_embeds=embeds)
+    return L.lm_head(cfg, params["embed"], x)
+
+
+# inference delegates to the dense backbone (image prefix enters via prefill)
+init_cache = dense.init_cache
+cache_axes = dense.cache_axes
+decode_step = dense.decode_step
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache):
+    return dense.prefill(cfg, params, tokens, cache)
+
+
+register_family("vlm")(__import__("sys").modules[__name__])

@@ -1,0 +1,264 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) — transformer backbone only.
+
+The conv audio frontend is a STUB per assignment: ``input_specs()`` provides
+precomputed frame embeddings [B, enc_seq, D].  Encoder = bidirectional
+transformer with sinusoidal positions; decoder = causal transformer with
+learned positions + cross-attention.  LayerNorm + GELU, pre-LN.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig, register_family
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _ln(cfg, d=None):
+    d = d or cfg.d_model
+    return {"scale": jnp.ones((d,), cfg.jdtype), "bias": jnp.zeros((d,), cfg.jdtype)}
+
+
+def _init_enc_block(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    return {"ln1": _ln(cfg), "attn": L.init_gqa(cfg, ks[0]),
+            "ln2": _ln(cfg), "mlp": L.init_mlp(cfg, ks[1])}
+
+
+def _init_dec_block(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    return {"ln1": _ln(cfg), "self_attn": L.init_gqa(cfg, ks[0]),
+            "ln_x": _ln(cfg), "cross_attn": L.init_gqa(cfg, ks[1]),
+            "ln2": _ln(cfg), "mlp": L.init_mlp(cfg, ks[2])}
+
+
+def init(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 5)
+    enc = jax.vmap(lambda k: _init_enc_block(cfg, k))(jax.random.split(ks[0], cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_block(cfg, k))(jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": {"tok": L.embed_init(ks[2], (cfg.vocab_size, cfg.d_model), cfg.jdtype)},
+        "pos_dec": L.embed_init(ks[3], (cfg.max_seq, cfg.d_model), cfg.jdtype),
+        "enc_layers": enc, "ln_enc": _ln(cfg),
+        "dec_layers": dec, "ln_dec": _ln(cfg),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    ln = {"scale": (None,), "bias": (None,)}
+    attn = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+            "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+    if cfg.qkv_bias:
+        attn.update({"bq": ("heads",), "bk": ("kv",), "bv": ("kv",)})
+    mlp = {"wi": ("embed", "mlp"), "bi": ("mlp",), "wo": ("mlp", "embed"), "bo": ("embed",)}
+    enc_blk = {"ln1": dict(ln), "attn": dict(attn), "ln2": dict(ln), "mlp": dict(mlp)}
+    dec_blk = {"ln1": dict(ln), "self_attn": dict(attn), "ln_x": dict(ln),
+               "cross_attn": dict(attn), "ln2": dict(ln), "mlp": dict(mlp)}
+    st = lambda t: jax.tree_util.tree_map(lambda ax: ("layers",) + ax, t,
+                                          is_leaf=lambda x: isinstance(x, tuple))
+    return {"embed": {"tok": ("vocab", "embed")}, "pos_dec": (None, "embed"),
+            "enc_layers": st(enc_blk), "ln_enc": dict(ln),
+            "dec_layers": st(dec_blk), "ln_dec": dict(ln)}
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+def _sinusoid(length: int, d: int, dtype):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / (d // 2 - 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames [B, enc_seq, D] (stub conv output) -> encoder states."""
+    b, s, d = frames.shape
+    x = frames + _sinusoid(s, d, frames.dtype)[None]
+
+    def body(carry, lp):
+        from repro.parallel.sharding import with_logical_constraint
+        y = with_logical_constraint(carry, ("batch", None, None))
+        h = L.layernorm(y, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        q, k, v = L.gqa_project_qkv(cfg, lp["attn"], h)
+        a = L.attention(cfg, q, k, v, causal=False)
+        y = y + a.reshape(b, s, -1) @ lp["attn"]["wo"]
+        h = L.layernorm(y, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        y = y + L.apply_mlp(cfg, lp["mlp"], h)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.layernorm(x, params["ln_enc"]["scale"], params["ln_enc"]["bias"])
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+def _dec_block(cfg, lp, x, enc, *, self_kv=None, pos=None, kv_valid_len=None):
+    """Full-seq (self_kv None) or cached single-token decode."""
+    from repro.parallel.sharding import with_logical_constraint
+    x = with_logical_constraint(x, ("batch", None, None))
+    b, s, _ = x.shape
+    h = L.layernorm(x, lp["ln1"]["scale"], lp["ln1"]["bias"])
+    q, k, v = L.gqa_project_qkv(cfg, lp["self_attn"], h)
+    new_kv = None
+    if self_kv is not None:
+        ck, cv = self_kv
+        ck = ck.at[jnp.arange(b), pos].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[jnp.arange(b), pos].set(v[:, 0].astype(cv.dtype))
+        new_kv = (ck, cv)
+        a = L.attention(cfg, q, ck, cv, causal=False, kv_valid_len=kv_valid_len)
+    else:
+        a = L.attention(cfg, q, k, v, causal=True)
+    x = x + a.reshape(b, s, -1) @ lp["self_attn"]["wo"]
+    h = L.layernorm(x, lp["ln_x"]["scale"], lp["ln_x"]["bias"])
+    if isinstance(enc, tuple):                       # precomputed cross k, v
+        qx = (h @ lp["cross_attn"]["wq"])
+        if "bq" in lp["cross_attn"]:
+            qx = qx + lp["cross_attn"]["bq"]
+        qx = qx.reshape(b, s, cfg.n_heads, cfg.head_dim)
+        kx, vx = enc
+        a = L.attention(cfg, qx, kx, vx, causal=False)
+    else:
+        qx, kx, vx = _cross_qkv(cfg, lp["cross_attn"], h, enc)
+        a = L.attention(cfg, qx, kx, vx, causal=False)
+    x = x + a.reshape(b, s, -1) @ lp["cross_attn"]["wo"]
+    h = L.layernorm(x, lp["ln2"]["scale"], lp["ln2"]["bias"])
+    x = x + L.apply_mlp(cfg, lp["mlp"], h)
+    return x, new_kv
+
+
+def _cross_qkv(cfg, p, x, enc):
+    b, s, _ = x.shape
+    se = enc.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (enc @ p["wk"]).reshape(b, se, cfg.kv_heads, cfg.head_dim)
+    v = (enc @ p["wv"]).reshape(b, se, cfg.kv_heads, cfg.head_dim)
+    if "bq" in p:
+        q = q + p["bq"].reshape(cfg.n_heads, cfg.head_dim)
+        k = k + p["bk"].reshape(cfg.kv_heads, cfg.head_dim)
+        v = v + p["bv"].reshape(cfg.kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def decode_states(cfg: ModelConfig, params, tokens, enc, positions=None):
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0) + params["pos_dec"][positions]
+
+    def body(carry, lp):
+        y, _ = _dec_block(cfg, lp, carry, enc)
+        if cfg.seq_shard_carry:
+            from repro.parallel.sharding import with_logical_constraint
+            y = with_logical_constraint(y, ("batch", "act_seq", None))
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return L.layernorm(x, params["ln_dec"]["scale"], params["ln_dec"]["bias"])
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rng=None):
+    enc = encode(cfg, params, batch["frames"])
+    x = decode_states(cfg, params, batch["tokens"], enc)
+    loss = L.chunked_softmax_xent(cfg, params["embed"], x, batch["labels"],
+                                  batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def logits_fn(cfg: ModelConfig, params, tokens, frames):
+    enc = encode(cfg, params, frames)
+    x = decode_states(cfg, params, tokens, enc)
+    return x @ params["embed"]["tok"].T          # tied head
+
+
+# ---------------------------------------------------------------------------
+# inference (cache: decoder self-attn KV + precomputed cross KV)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.jdtype
+    kv = (cfg.n_layers, batch_size, max_seq, cfg.kv_heads, cfg.head_dim)
+    xkv = (cfg.n_layers, batch_size, cfg.enc_seq, cfg.kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "xk": jnp.zeros(xkv, dtype), "xv": jnp.zeros(xkv, dtype),
+            "pos": jnp.zeros((batch_size,), jnp.int32)}
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"k": ("layers", "batch", "kv_seq", "kv", None),
+            "v": ("layers", "batch", "kv_seq", "kv", None),
+            "xk": ("layers", "batch", None, "kv", None),
+            "xv": ("layers", "batch", None, "kv", None),
+            "pos": ("batch",)}
+
+
+def prefill(cfg: ModelConfig, params, batch, cache):
+    """batch {frames, tokens} -> (last logits, cache with cross+self KV)."""
+    frames, tokens = batch["frames"], batch["tokens"]
+    b, s = tokens.shape
+    enc = encode(cfg, params, frames)
+
+    def xkv(lp):
+        _, k, v = _cross_qkv(cfg, lp["cross_attn"], enc[:, :1], enc)
+        return k, v
+    xks, xvs = jax.lax.map(xkv, params["dec_layers"])
+
+    def body(carry, lp):
+        y = carry
+        h = L.layernorm(y, lp["ln1"]["scale"], lp["ln1"]["bias"])
+        q, k, v = L.gqa_project_qkv(cfg, lp["self_attn"], h)
+        a = L.attention(cfg, q, k, v, causal=True)
+        y = y + a.reshape(b, s, -1) @ lp["self_attn"]["wo"]
+        h = L.layernorm(y, lp["ln_x"]["scale"], lp["ln_x"]["bias"])
+        qx, kx, vx = _cross_qkv(cfg, lp["cross_attn"], h, enc)
+        a = L.attention(cfg, qx, kx, vx, causal=False)
+        y = y + a.reshape(b, s, -1) @ lp["cross_attn"]["wo"]
+        h = L.layernorm(y, lp["ln2"]["scale"], lp["ln2"]["bias"])
+        y = y + L.apply_mlp(cfg, lp["mlp"], h)
+        return y, (k, v)
+
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0) + params["pos_dec"][jnp.arange(s)]
+    x, (ks, vs) = jax.lax.scan(body, x, params["dec_layers"])
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], ks.astype(cache["k"].dtype), (0,) * 5)
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vs.astype(cache["v"].dtype), (0,) * 5)
+    cache["xk"], cache["xv"] = xks.astype(cache["xk"].dtype), xvs.astype(cache["xv"].dtype)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    x = L.layernorm(x, params["ln_dec"]["scale"], params["ln_dec"]["bias"])
+    return x[:, -1:] @ params["embed"]["tok"].T, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    valid = pos + 1
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0) + params["pos_dec"][pos][:, None]
+
+    def body(carry, xs):
+        lp, ck, cv, xk, xv = xs
+        y, new_kv = _dec_block(cfg, lp, carry, (xk, xv), self_kv=(ck, cv),
+                               pos=pos, kv_valid_len=valid)
+        return y, new_kv
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    cache = dict(cache)
+    cache["k"], cache["v"] = ks, vs
+    cache["pos"] = pos + 1
+    x = L.layernorm(x, params["ln_dec"]["scale"], params["ln_dec"]["bias"])
+    return x @ params["embed"]["tok"].T, cache
+
+
+register_family("whisper")(__import__("sys").modules[__name__])

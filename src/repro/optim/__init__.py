@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, lion, sgd, clip_by_global_norm, apply_updates,
+)
+from repro.optim.schedules import constant, cosine, wsd  # noqa: F401

@@ -1,0 +1,94 @@
+"""Optimizers (pure JAX, optax-style (init, update) pairs).
+
+Optimizer state lives in the same sharding as the parameters' logical axes
+(ZeRO: m/v inherit the param PartitionSpec), so launch/dryrun shards it with
+the rules table — no replicated optimizer memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (updates, new_state)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": _tmap(zeros, params), "v": _tmap(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(state_dtype),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(state_dtype)),
+                  state["v"], grads)
+        def upd(m_, v_, p):
+            mhat = m_ / b1t
+            vhat = v_ / b2t
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(state_dtype)
+            return (-lr * u).astype(p.dtype)
+        updates = _tmap(upd, m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def lion(b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1,
+         state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros(p.shape, state_dtype), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(m_, g, p):
+            g32 = g.astype(state_dtype)
+            c = b1 * m_ + (1 - b1) * g32
+            return (-lr * (jnp.sign(c) + weight_decay * p.astype(state_dtype))).astype(p.dtype)
+        updates = _tmap(upd, state["m"], grads, params)
+        m = _tmap(lambda m_, g: b2 * m_ + (1 - b2) * g.astype(state_dtype),
+                  state["m"], grads)
+        return updates, {"m": m, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def sgd(momentum: float = 0.9, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros(p.shape, state_dtype), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        m = _tmap(lambda m_, g: momentum * m_ + g.astype(state_dtype),
+                  state["m"], grads)
+        updates = _tmap(lambda m_, p: (-lr * m_).astype(p.dtype), m, params)
+        return updates, {"m": m, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return _tmap(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: (p + u).astype(p.dtype), params, updates)

@@ -1,0 +1,30 @@
+"""LR schedules. WSD (Warmup-Stable-Decay) per MiniCPM (arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos).astype(jnp.float32)
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int, final_frac: float = 0.01):
+    """Warmup -> Stable (flat) -> Decay (exponential-ish linear-in-log)."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * jnp.exp(jnp.log(jnp.maximum(final_frac, 1e-6)) * t)
+        out = jnp.where(s < warmup, warm, jnp.where(s < warmup + stable, lr, dec))
+        return out.astype(jnp.float32)
+    return f

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    DEFAULT_RULES, make_shardings, resolve_spec, with_logical_constraint,
+)

@@ -1,0 +1,95 @@
+"""Explicit expert parallelism via shard_map (the D-series follow-up).
+
+Plain-SPMD MoE dispatch cannot shard the experts axis: the data-dependent
+gather/scatter across a sharded experts dim lowers to whole-buffer
+all-reduces (EXPERIMENTS §Perf D1). This module expresses EP explicitly:
+
+* tokens replicated across the ``expert_axis`` (they already are — the model
+  axis carries TP, activations are replicated over it);
+* each shard owns E/n experts, locally dispatches ALL tokens to ITS experts
+  (top-k hits for other shards' experts simply mask out locally);
+* each shard computes partial combine outputs for its experts only;
+* one psum over the expert axis sums the partials — the only collective,
+  [tokens, D] per MoE layer (same size as a TP matmul reduction), instead of
+  [G, E, C, D] buffer all-reduces.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _local_moe(x2d, router, wg, wu, wd, *, topk: int, n_local: int,
+               e_total: int, capacity: int, axis: str):
+    """x2d [N, D] (replicated over axis); wg/wu/wd local [E/n, D, F]."""
+    idx = jax.lax.axis_index(axis)
+    lo = idx * n_local
+    gates = jax.nn.softmax((x2d.astype(jnp.float32) @ router), axis=-1)
+    topv, topi = jax.lax.top_k(gates, topk)                     # [N, K]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    n, d = x2d.shape
+    # global rank within each local expert across ALL top-k slots
+    # (token-major flattening: slot (t, j) -> row t*K + j)
+    e_all = topi.reshape(-1)                                    # [N*K]
+    local_all = (e_all >= lo) & (e_all < lo + n_local)
+    le_all = jnp.where(local_all, e_all - lo, n_local)
+    onehot = jax.nn.one_hot(le_all, n_local + 1, dtype=jnp.int32)[:, :n_local]
+    ranks = jnp.take_along_axis(jnp.cumsum(onehot, 0) - onehot,
+                                jnp.minimum(le_all, n_local - 1)[:, None],
+                                1)[:, 0]                        # [N*K]
+
+    buf = jnp.zeros((n_local, capacity, d), x2d.dtype)
+    for j in range(topk):
+        le_j, pos_j, loc_j = le_all[j::topk], ranks[j::topk], local_all[j::topk]
+        pos_j = jnp.where(loc_j & (pos_j < capacity), pos_j, capacity)
+        buf = buf.at[jnp.minimum(le_j, n_local - 1), pos_j].add(
+            x2d, mode="drop")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg,
+                               preferred_element_type=jnp.float32))
+    h = h.astype(x2d.dtype) * jnp.einsum("ecd,edf->ecf", buf, wu)
+    yb = jnp.einsum("ecf,efd->ecd", h, wd)                      # [E/n, C, D]
+
+    y = jnp.zeros((n, d), jnp.float32)
+    for j in range(topk):
+        le_j, pos_j, loc_j = le_all[j::topk], ranks[j::topk], local_all[j::topk]
+        got = yb[jnp.minimum(le_j, n_local - 1), jnp.minimum(pos_j, capacity - 1)]
+        keep = (loc_j & (pos_j < capacity))[:, None]
+        y = y + jnp.where(keep, got, 0).astype(jnp.float32) * topv[:, j][:, None]
+    return jax.lax.psum(y, axis).astype(x2d.dtype)
+
+
+def ep_moe_ffn(x2d, params: Dict[str, Any], mesh: Mesh, *, topk: int,
+               capacity_factor: float = 1.25, expert_axis: str = "model"):
+    """x2d [N, D] (token rows sharded over the data axes, replicated over
+    ``expert_axis``); params {router [D,E], wg/wu/wd [E, D, F]/[E, F, D]}.
+
+    Each (data_i, expert_j) device dispatches its LOCAL token shard to its
+    LOCAL experts; one psum over ``expert_axis`` combines. Exact match with
+    the plain-SPMD dispatch at equal capacity (see tests).
+    """
+    e_total = params["wg"].shape[0]
+    n_shards = mesh.shape[expert_axis]
+    assert e_total % n_shards == 0, (e_total, n_shards)
+    n_local = e_total // n_shards
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names
+                      and x2d.shape[0] % mesh.shape[a] == 0)
+    n_data = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+    n_tok_local = x2d.shape[0] // n_data
+    capacity = max(8, int(math.ceil(
+        capacity_factor * n_tok_local * topk / e_total)))
+    tok_spec = P(data_axes if data_axes else None)
+
+    body = lambda x, r, g, u, w: _local_moe(
+        x, r, g, u, w, topk=topk, n_local=n_local, e_total=e_total,
+        capacity=capacity, axis=expert_axis)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(tok_spec, P(), P(expert_axis), P(expert_axis), P(expert_axis)),
+        out_specs=tok_spec, check_vma=False,
+    )(x2d, params["router"], params["wg"], params["wu"], params["wd"])

@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Every param/cache tensor carries a tuple of logical axis names (see each
+family's ``param_axes`` / ``cache_axes``).  A rules table maps logical axes to
+candidate mesh axes *in priority order*; resolution walks each tensor's dims,
+assigning the first candidate mesh axis (or axis tuple) that (a) is still
+unused by this tensor and (b) divides the dim size.  Indivisible dims fall
+back to replication — e.g. smollm's 9 heads on a 16-way model axis — instead
+of failing, which is what lets one rules table drive all 10 architectures.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> candidate mesh-axis assignments, best first.
+# each candidate is a tuple of mesh axes used together for that dim.
+DEFAULT_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "batch":   (("pod", "data"), ("data",)),
+    "vocab":   (("model",),),
+    "embed":   (("data",),),          # FSDP / ZeRO-3 storage sharding
+    "heads":   (("model",),),
+    "kv":      (("model",),),
+    "mlp":     (("model",),),
+    # experts stay replicated under plain-SPMD dispatch: sharding the experts
+    # axis makes the (data-dependent) dispatch gather/scatter cross-shard and
+    # XLA lowers it to per-layer all-reduces of the whole [G,E,C,D] buffer
+    # (measured: 17 TB/device/step on deepseek train_4k — see EXPERIMENTS §Perf
+    # iter D1). TP-within-expert (embed->data, mlp->model) carries the weight
+    # sharding instead; true EP needs the shard_map dispatch (future work).
+    "experts": (),
+    # decode/long cells: shard the KV-cache sequence axis over whatever is
+    # left after batch/kv-heads claim their axes (flash-decode split-K across
+    # devices; combined via XLA's partitioned softmax).
+    "kv_seq":  (("model", "data"), ("model",), ("data",)),
+    "layers":  (),
+    "seq":     (),
+    # saved layer-boundary activations (remat carries) shard their seq dim
+    # over the model axis (Megatron sequence parallelism)
+    "act_seq": (("model",),),
+}
+
+
+def _mesh_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_spec(axes: Optional[Tuple], shape: Tuple[int, ...], mesh: Mesh,
+                 rules: Dict[str, Tuple] = None) -> P:
+    """(logical axes, shape) -> PartitionSpec under the rules table."""
+    rules = rules or DEFAULT_RULES
+    sizes = _mesh_sizes(mesh)
+    if axes is None:
+        return P()
+    assert len(axes) == len(shape), (axes, shape)
+    used: set = set()
+    parts = []
+    for name, dim in zip(axes, shape):
+        assigned = None
+        if name is not None:
+            for cand in rules.get(name, ()):
+                cand = tuple(a for a in cand if a in sizes)
+                if not cand or any(a in used for a in cand):
+                    continue
+                total = math.prod(sizes[a] for a in cand)
+                if total > 1 and dim % total == 0:
+                    assigned = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+        parts.append(assigned)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def make_shardings(axes_tree: Any, abstract_tree: Any, mesh: Mesh,
+                   rules: Dict[str, Tuple] = None) -> Any:
+    """Pytree of NamedSharding matching ``abstract_tree``'s structure."""
+    is_axes = lambda x: x is None or (isinstance(x, tuple)
+                                      and all(a is None or isinstance(a, str) for a in x))
+
+    def one(ax, leaf):
+        spec = resolve_spec(ax if ax is not None else (None,) * leaf.ndim,
+                            leaf.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, axes_tree, abstract_tree, is_leaf=is_axes)
+
+
+def spec_tree(axes_tree: Any, abstract_tree: Any, mesh: Mesh,
+              rules: Dict[str, Tuple] = None) -> Any:
+    is_axes = lambda x: x is None or (isinstance(x, tuple)
+                                      and all(a is None or isinstance(a, str) for a in x))
+    return jax.tree_util.tree_map(
+        lambda ax, leaf: resolve_spec(ax if ax is not None else (None,) * leaf.ndim,
+                                      leaf.shape, mesh, rules),
+        axes_tree, abstract_tree, is_leaf=is_axes)
+
+
+_ACTIVE_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_active_rules", default=None)
+
+
+@contextlib.contextmanager
+def active_rules(rules: Dict[str, Tuple]):
+    """Make per-arch rule overrides visible to every logical constraint
+    traced within (the dry-run wraps lowering in this)."""
+    tok = _ACTIVE_RULES.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE_RULES.reset(tok)
+
+
+def with_logical_constraint(x, axes: Tuple, mesh: Optional[Mesh] = None,
+                            rules: Dict[str, Tuple] = None):
+    """with_sharding_constraint via logical axis names (no-op off-mesh)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    rules = rules or _ACTIVE_RULES.get() or DEFAULT_RULES
+    spec = resolve_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src.mesh import thread_resources
+        env = thread_resources.env
+        return env.physical_mesh
+    except Exception:
+        return None

@@ -1,0 +1,2 @@
+from repro.runtime.ft import FTConfig, TrainerLoop  # noqa: F401
+from repro.runtime.straggler import StragglerPolicy  # noqa: F401

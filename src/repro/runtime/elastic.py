@@ -1,0 +1,35 @@
+"""Elastic scaling: resume a checkpoint on a different mesh.
+
+The checkpoint stores full (unsharded) leaves; ``reshard_state`` places them
+onto the new mesh with shardings re-resolved from the same logical-axis
+rules — so a job can shrink from 2 pods to 1 (or grow) and continue, which is
+the practical response to losing a pod in a 1000+-node run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.models.base import ModelConfig, get_family
+from repro.parallel.sharding import DEFAULT_RULES, make_shardings
+
+
+def state_shardings(cfg: ModelConfig, state: Dict[str, Any], mesh,
+                    rules=None) -> Dict[str, Any]:
+    """Shardings for a {'params':…, 'opt':…} training state on ``mesh``."""
+    fam = get_family(cfg)
+    axes = fam.param_axes(cfg)
+    out: Dict[str, Any] = {}
+    out["params"] = make_shardings(axes, state["params"], mesh, rules)
+    opt_axes = {}
+    for k, v in state["opt"].items():
+        opt_axes[k] = None if k == "step" else axes
+    out["opt"] = make_shardings(opt_axes, state["opt"], mesh, rules)
+    return out
+
+
+def reshard_state(cfg: ModelConfig, state: Dict[str, Any], new_mesh,
+                  rules=None) -> Dict[str, Any]:
+    sh = state_shardings(cfg, state, new_mesh, rules or DEFAULT_RULES)
+    return jax.tree_util.tree_map(jax.device_put, state, sh)

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device (NOT the 512-device dry-run env);
+# a couple of distributed tests spawn their own device count via subprocess.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

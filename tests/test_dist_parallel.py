@@ -1,0 +1,83 @@
+"""Distributed attention + explicit-EP dispatch vs single-device oracles
+(8 forced host devices via subprocess)."""
+import subprocess
+import sys
+import textwrap
+
+
+def _run(code: str):
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    return r.stdout
+
+
+def test_dist_decode_attention_exact():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.parallel.dist_attention import dist_decode_attention
+        from repro.kernels.decode_attention import ops as da
+        mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        ks = jax.random.split(jax.random.key(0), 4)
+        B, S, H, Hkv, D = 2, 256, 4, 2, 32
+        q = jax.random.normal(ks[0], (B, 1, H, D))
+        k = jax.random.normal(ks[1], (B, S, Hkv, D))
+        v = jax.random.normal(ks[2], (B, S, Hkv, D))
+        vl = jnp.array([200, 97], jnp.int32)
+        ref = da.decode_attention(q, k, v, vl, use_ref=True)
+        got = jax.jit(lambda *a: dist_decode_attention(*a, mesh))(q, k, v, vl)
+        err = float(jnp.abs(ref - got).max())
+        assert err < 2e-5, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_ep_dispatch_matches_spmd_moe():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.parallel.ep_dispatch import ep_moe_ffn
+        from repro.models.base import ModelConfig
+        from repro.models import moe as M
+        mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+        cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                          n_heads=4, d_ff=0, vocab_size=64, dtype="float32",
+                          n_experts=8, moe_topk=2, d_ff_expert=16,
+                          moe_capacity=100.0, moe_groups=1)
+        p = M.init_moe_ffn(cfg, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (48, 32))
+        y_ref, _ = M.moe_ffn(cfg, p, x)
+        y_ep = jax.jit(lambda x: ep_moe_ffn(
+            x, p, mesh, topk=2, capacity_factor=100.0))(x)
+        err = float(jnp.abs(y_ref - y_ep).max())
+        assert err < 2e-5, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_ep_dispatch_differentiable():
+    """EP dispatch gradients flow (it runs inside the scanned train step)."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.parallel.ep_dispatch import ep_moe_ffn
+        from repro.models.base import ModelConfig
+        from repro.models import moe as M
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                          n_heads=4, d_ff=0, vocab_size=64, dtype="float32",
+                          n_experts=8, moe_topk=2, d_ff_expert=16)
+        p = M.init_moe_ffn(cfg, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (64, 32))
+        f = lambda p, x: (ep_moe_ffn(x, p, mesh, topk=2) ** 2).sum()
+        g = jax.jit(jax.grad(f))(p, x)
+        total = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(g))
+        assert total > 0 and jnp.isfinite(jnp.asarray(total))
+        print("OK", total)
+    """)
+    assert "OK" in out

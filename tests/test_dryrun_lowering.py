@@ -1,0 +1,53 @@
+"""Integration test of the dry-run path itself: lower + compile real cells
+on a small forced-device mesh (subprocess; the production 512-device sweep
+lives in experiments/dryrun_*.json)."""
+import subprocess
+import sys
+import textwrap
+
+
+def _run(code: str, devices: int = 8):
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+             "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    return r.stdout
+
+
+def test_lower_compile_train_and_decode_cells():
+    out = _run("""
+        import jax
+        from repro.launch.dryrun import lower_cell
+        from repro.launch import hlo_analysis
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        for arch, shape in [("smollm-135m", "train_4k"),
+                            ("rwkv6-1.6b", "decode_32k")]:
+            lowered, meta = lower_cell(arch, shape, mesh)
+            compiled = lowered.compile()
+            m = compiled.memory_analysis()
+            costs = hlo_analysis.analyze_module(compiled.as_text(), 8)
+            assert costs.flops > 0
+            assert m.argument_size_in_bytes > 0
+            print("OK", arch, shape, f"{costs.flops:.2e}")
+    """)
+    assert out.count("OK") == 2
+
+
+def test_multipod_axis_shards_batch():
+    """The pod axis must actually participate in the batch sharding."""
+    out = _run("""
+        import jax
+        from repro.launch.dryrun import lower_cell
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        lowered, _ = lower_cell("stablelm-3b", "decode_32k", mesh)
+        txt = lowered.as_text()
+        assert "num_partitions = 8" in txt or "num_partitions=8" in txt
+        assert '"pod"' in txt        # pod axis present in the sdy mesh
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,167 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,sq,sk,h,hkv,d,causal", [
+    (2, 128, 128, 4, 2, 64, True),
+    (1, 64, 64, 3, 3, 32, True),
+    (2, 100, 100, 4, 1, 64, True),      # padding path
+    (1, 96, 160, 2, 2, 128, False),     # cross-length, non-causal
+    (1, 256, 256, 2, 1, 128, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, sq, sk, h, hkv, d, causal, dtype):
+    from repro.kernels.flash_attention import ops as fa
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, sk, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, sk, hkv, d), dtype)
+    o_ref = fa.flash_attention(q, k, v, causal=causal, use_ref=True)
+    o_ker = fa.flash_attention(q, k, v, causal=causal, interpret=True,
+                               blk_q=64, blk_k=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_ker, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,sk,h,hkv,d", [
+    (2, 256, 4, 2, 64), (3, 1000, 4, 4, 32), (1, 512, 8, 1, 128),
+])
+def test_decode_attention(b, sk, h, hkv, d):
+    from repro.kernels.decode_attention import ops as da
+    ks = jax.random.split(jax.random.key(1), 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    k = jax.random.normal(ks[1], (b, sk, hkv, d))
+    v = jax.random.normal(ks[2], (b, sk, hkv, d))
+    vl = jax.random.randint(ks[3], (b,), 1, sk + 1)
+    o_ref = da.decode_attention(q, k, v, vl, use_ref=True)
+    o_ker = da.decode_attention(q, k, v, vl, interpret=True, blk_k=128)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv6 (rwkv6 recurrence)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,t,h,n,chunk", [
+    (2, 64, 2, 16, 16), (1, 100, 3, 8, 32), (2, 48, 4, 32, 16),
+])
+def test_wkv6_kernel(b, t, h, n, chunk):
+    from repro.kernels.rwkv6_scan import kernel as K, ref as R
+    ks = jax.random.split(jax.random.key(2), 5)
+    r = jax.random.normal(ks[0], (b, t, h, n)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, n)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, n)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, n))) * 0.2 + 0.8
+    u = jax.random.normal(ks[4], (h, n)) * 0.3
+    st = jax.random.normal(jax.random.key(9), (b, h, n, n)) * 0.1
+    y1, s1 = R.wkv6_ref(r, k, v, w, u, st)
+    y2, s2 = K.wkv6_pallas(r, k, v, w, u, st, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1), atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_chunked_ops_matches_sequential():
+    from repro.kernels.rwkv6_scan import ops, ref
+    ks = jax.random.split(jax.random.key(3), 5)
+    b, t, h, n = 2, 40, 2, 8
+    r = jax.random.normal(ks[0], (b, t, h, n)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, n)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, n)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, n))) * 0.3 + 0.7
+    u = jax.random.normal(ks[4], (h, n)) * 0.3
+    st = jnp.zeros((b, h, n, n))
+    y1, s1 = ref.wkv6_ref(r, k, v, w, u, st)
+    y2, s2 = ops.wkv6_chunked(r, k, v, w, u, st, chunk=16)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd (mamba2 recurrence)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,t,h,p,n,chunk", [
+    (2, 64, 2, 16, 8, 16), (1, 96, 4, 8, 16, 32), (2, 80, 2, 32, 64, 16),
+])
+def test_ssd_kernel(b, t, h, p, n, chunk):
+    from repro.kernels.ssm_scan import kernel as K, ref as R
+    ks = jax.random.split(jax.random.key(4), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, t, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, t, n)) * 0.5
+    D = jnp.ones((h,)) * 0.5
+    st = jax.random.normal(jax.random.key(8), (b, h, p, n)) * 0.1
+    y1, s1 = R.ssd_ref(x, dt, A, Bm, Cm, D, st)
+    y2, s2 = K.ssd_pallas(x, dt, A, Bm, Cm, D, st, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1), atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_chunked_ops_matches_sequential():
+    from repro.kernels.ssm_scan import ops, ref
+    ks = jax.random.split(jax.random.key(5), 5)
+    b, t, h, p, n = 2, 50, 2, 8, 8
+    x = jax.random.normal(ks[0], (b, t, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, t, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, t, n)) * 0.5
+    D = jnp.zeros((h,))
+    st = jnp.zeros((b, h, p, n))
+    y1, s1 = ref.ssd_ref(x, dt, A, Bm, Cm, D, st)
+    y2, s2 = ops.ssd_chunked(x, dt, A, Bm, Cm, D, st, chunk=16)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# uct_select
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("r,a", [(7, 4), (300, 8), (64, 130), (1, 2)])
+def test_uct_argmax_kernel(r, a):
+    from repro.kernels.uct_select import ops as uo
+    ks = jax.random.split(jax.random.key(6), 4)
+    n = jax.random.randint(ks[0], (r, a), 0, 50).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (r, a)) * 3
+    vl = jax.random.randint(ks[2], (r, a), 0, 3).astype(jnp.float32)
+    pn = n.sum(-1) + 1
+    valid = jax.random.bernoulli(ks[3], 0.8, (r, a)).at[:, 0].set(True)
+    a1 = uo.uct_argmax(n, w, vl, pn, cp=1.4, valid=valid, use_ref=True)
+    a2 = uo.uct_argmax(n, w, vl, pn, cp=1.4, valid=valid, interpret=True)
+    assert bool((a1 == a2).all())
+
+
+# ---------------------------------------------------------------------------
+# flash backward (custom VJP) vs autodiff-through-sdpa
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cap", [0.0, 30.0])
+@pytest.mark.parametrize("dv", [16, 8])
+def test_blocked_attention_grads(cap, dv):
+    from repro.models import layers as L
+    ks = jax.random.split(jax.random.key(7), 4)
+    b, s, h, hkv, d = 2, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, dv))
+    t = jax.random.normal(ks[3], (b, s, h, dv))
+    f1 = lambda q, k, v: (L.sdpa(q, k, v, causal=True, logits_soft_cap=cap) * t).sum()
+    f2 = lambda q, k, v: (L.blocked_attention(
+        q, k, v, causal=True, blk_q=32, blk_k=16, logits_soft_cap=cap) * t).sum()
+    o1, g1 = jax.value_and_grad(f1, argnums=(0, 1, 2))(q, k, v)
+    o2, g2 = jax.value_and_grad(f2, argnums=(0, 1, 2))(q, k, v)
+    assert abs(float(o1 - o2)) < 1e-3
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a), atol=1e-4, rtol=1e-3)

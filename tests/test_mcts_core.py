@@ -1,0 +1,171 @@
+"""MCTS core behaviour: paper schedule arithmetic, tree invariants,
+pipeline vs sequential strength, baselines, domains."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule
+from repro.core.domains.pgame import (PGameDomain, enumerate_root_values,
+                                      optimal_root_action)
+from repro.core.leaf_parallel import run_leaf_parallel
+from repro.core.pipeline import PipelineConfig, run_pipeline
+from repro.core.root_parallel import root_parallel_action, run_root_parallel
+from repro.core.sequential import run_sequential
+from repro.core.stages import SearchParams
+from repro.core.tree import check_consistency, root_action_by_visits
+from repro.core.tree_parallel import run_tree_parallel
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
+SP = SearchParams(cp=0.7, max_depth=6)
+
+
+# ---------------------------------------------------------------------------
+# paper's scheduling figures (the paper's only quantitative artifacts)
+# ---------------------------------------------------------------------------
+def test_fig3_linear_equal_stages():
+    assert schedule.pipeline_makespan(4, (1, 1, 1, 1), lanes=1) == 7.0
+    assert schedule.sequential_makespan(4) == 16.0
+
+
+def test_fig4_unequal_stages():
+    assert schedule.pipeline_makespan(4, (1, 1, 2, 1), lanes=1) == 11.0
+
+
+def test_fig6_nonlinear_two_playout_lanes():
+    assert schedule.pipeline_makespan(4, (1, 1, 2, 1), lanes=2) == 8.0
+
+
+def test_steady_state_throughput():
+    # slowest stage bounds throughput; lanes restore it (paper §V-C)
+    assert schedule.steady_state_throughput((1, 1, 2, 1), 1) == 0.5
+    assert schedule.steady_state_throughput((1, 1, 2, 1), 2) == 1.0
+
+
+def test_makespan_monotone_in_lanes():
+    base = schedule.pipeline_makespan(32, (1, 1, 4, 1), lanes=1)
+    for lanes in (2, 4, 8):
+        t = schedule.pipeline_makespan(32, (1, 1, 4, 1), lanes=lanes)
+        assert t <= base
+        base = t
+
+
+# ---------------------------------------------------------------------------
+# tree invariants
+# ---------------------------------------------------------------------------
+def _consistent(tree):
+    c = check_consistency(tree)
+    assert c["vloss_drained"], c
+    assert c["visit_flow"], c
+    assert c["parents_valid"], c
+
+
+def test_sequential_invariants_and_strength():
+    tree, _ = jax.jit(lambda r: run_sequential(DOM, SP, 256, r))(jax.random.key(0))
+    _consistent(tree)
+    assert int(tree["visits"][0]) == 256
+    assert int(root_action_by_visits(tree)) == optimal_root_action(DOM)
+
+
+def test_pipeline_invariants():
+    cfg = PipelineConfig(budget=128, lanes=4, params=SP)
+    tree, stats = jax.jit(lambda r: run_pipeline(DOM, cfg, r))(jax.random.key(0))
+    _consistent(tree)
+    assert int(stats["playouts"]) == 128
+    assert float(stats["mean_occupancy"]) > 0.8   # pipeline keeps stages busy
+
+
+def test_pipeline_linear_lanes1():
+    cfg = PipelineConfig(budget=64, lanes=1, params=SP)
+    tree, stats = jax.jit(lambda r: run_pipeline(DOM, cfg, r))(jax.random.key(1))
+    _consistent(tree)
+    assert int(stats["playouts"]) == 64
+
+
+def test_tree_parallel_invariants():
+    tree, stats = jax.jit(lambda r: run_tree_parallel(DOM, SP, 128, 8, r))(jax.random.key(0))
+    _consistent(tree)
+    assert int(stats["playouts"]) == 128
+
+
+def test_leaf_parallel_runs():
+    tree, stats = jax.jit(lambda r: run_leaf_parallel(DOM, SP, 128, 4, r))(jax.random.key(0))
+    assert int(stats["playouts"]) == 128
+    assert int(tree["visits"][0]) == 128          # aggregated backups
+
+
+def test_root_parallel_combines():
+    combined, stats = jax.jit(lambda r: run_root_parallel(DOM, SP, 128, 4, r))(jax.random.key(0))
+    assert int(combined["action_visits"].sum()) >= 124   # 4 workers x 32 - roots
+    assert 0 <= int(root_parallel_action(combined)) < DOM.num_actions
+
+
+# ---------------------------------------------------------------------------
+# the paper's central claim: pipeline search overhead is bounded by the
+# in-flight window, below tree parallelization at equal hardware concurrency
+# ---------------------------------------------------------------------------
+def test_pipeline_duplicates_bounded_vs_tree_parallel():
+    lanes = 8
+    budget = 256
+    dup_pipe, dup_tp = [], []
+    for s in range(3):
+        cfg = PipelineConfig(budget=budget, lanes=lanes, params=SP)
+        _, st = jax.jit(lambda r: run_pipeline(DOM, cfg, r))(jax.random.key(s))
+        dup_pipe.append(int(st["duplicates"]))
+        _, st2 = jax.jit(lambda r: run_tree_parallel(DOM, SP, budget, 4 * lanes, r))(jax.random.key(s))
+        dup_tp.append(int(st2["duplicates"]))
+    assert np.mean(dup_pipe) <= np.mean(dup_tp), (dup_pipe, dup_tp)
+
+
+def test_pipeline_strength_tracks_sequential():
+    """At equal budget, pipeline's recommended action matches the optimum
+    about as often as sequential (strength-scalability, def. 2)."""
+    budget, seeds = 192, 6
+    opt = optimal_root_action(DOM)
+    seq_hits = pipe_hits = 0
+    cfg = PipelineConfig(budget=budget, lanes=4, params=SP)
+    seq_j = jax.jit(lambda r: run_sequential(DOM, SP, budget, r))
+    pipe_j = jax.jit(lambda r: run_pipeline(DOM, cfg, r))
+    for s in range(seeds):
+        t1, _ = seq_j(jax.random.key(s))
+        t2, _ = pipe_j(jax.random.key(s))
+        seq_hits += int(root_action_by_visits(t1)) == opt
+        pipe_hits += int(root_action_by_visits(t2)) == opt
+    assert pipe_hits >= seq_hits - 2   # within noise at these budgets
+
+
+# ---------------------------------------------------------------------------
+# domains
+# ---------------------------------------------------------------------------
+def test_pgame_enumeration_matches_playouts():
+    dom = PGameDomain(num_actions=3, game_depth=4, binary_reward=False, seed=7)
+    vals = enumerate_root_values(dom)
+    # Monte-Carlo estimate of the root values via domain.playout
+    est = np.zeros(3)
+    n = 1500
+    for a in range(3):
+        st = dom.step(dom.root_state(), jnp.int32(a))
+        rngs = jax.random.split(jax.random.key(a), n)
+        r = jax.vmap(lambda k: dom.playout(st, k))(rngs)
+        est[a] = float(r.mean())
+    np.testing.assert_allclose(est, vals, atol=0.03)
+
+
+def test_lm_decode_domain():
+    from repro.core.domains.lm_decode import LMDecodeDomain
+    from repro.models.base import ModelConfig, get_family
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", ce_chunk=8, remat=False)
+    fam = get_family(cfg)
+    params = fam.init(cfg, jax.random.key(0))
+    dom = LMDecodeDomain(cfg=cfg, params=params,
+                         prompt=jnp.array([1, 2, 3], jnp.int32),
+                         num_actions=3, search_depth=3, rollout_len=2)
+    st = dom.root_state()
+    st2 = dom.step(st, jnp.int32(1))
+    assert int(st2["len"]) == 4
+    v = dom.playout(st2, jax.random.key(0))
+    assert 0.0 < float(v) <= 1.0
+    pri = dom.priors(st2)
+    np.testing.assert_allclose(float(pri.sum()), 1.0, atol=1e-5)

@@ -1,0 +1,147 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule, uct
+from repro.parallel.sharding import DEFAULT_RULES, resolve_spec
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# schedule model properties (paper's pipeline arithmetic)
+# ---------------------------------------------------------------------------
+@given(n=st.integers(1, 64),
+       costs=st.tuples(*[st.floats(0.25, 4.0) for _ in range(4)]),
+       lanes=st.integers(1, 8))
+def test_pipeline_never_slower_than_sequential(n, costs, lanes):
+    p = schedule.pipeline_makespan(n, costs, lanes)
+    s = schedule.sequential_makespan(n, costs)
+    assert p <= s + 1e-9
+
+
+@given(n=st.integers(2, 64),
+       costs=st.tuples(*[st.floats(0.25, 4.0) for _ in range(4)]))
+def test_pipeline_lower_bound_is_bottleneck(n, costs):
+    """Makespan >= n / steady-state throughput (slowest-stage bound)."""
+    p = schedule.pipeline_makespan(n, costs, lanes=1)
+    bound = n * max(costs)
+    assert p >= bound - 1e-9
+
+
+@given(n=st.integers(1, 32),
+       cp=st.floats(0.5, 4.0), lanes=st.integers(1, 8))
+def test_lanes_saturate_at_playout_cost(n, cp, lanes):
+    costs = (1.0, 1.0, cp, 1.0)
+    t1 = schedule.pipeline_makespan(n, costs, lanes)
+    t2 = schedule.pipeline_makespan(n, costs, lanes + 1)
+    assert t2 <= t1 + 1e-9          # more lanes never hurts
+
+
+# ---------------------------------------------------------------------------
+# UCT scoring properties (paper eq. 1)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2**31 - 1))
+def test_uct_picks_unvisited_first(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(2, 12)
+    n = rng.integers(1, 50, a).astype(np.float32)
+    unv = rng.integers(0, a)
+    n[unv] = 0
+    w = rng.normal(size=a).astype(np.float32) * 10
+    s = uct.uct_scores(jnp.asarray(n), jnp.asarray(w), jnp.zeros(a),
+                       jnp.asarray(n.sum()), 1.4)
+    assert int(jnp.argmax(s)) == unv
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_uct_exploitation_dominates_at_cp0(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(2, 12)
+    n = rng.integers(1, 50, a).astype(np.float32)
+    w = rng.random(a).astype(np.float32) * n      # q in [0,1]
+    s = uct.uct_scores(jnp.asarray(n), jnp.asarray(w), jnp.zeros(a),
+                       jnp.asarray(n.sum()), cp=0.0)
+    assert int(jnp.argmax(s)) == int(np.argmax(w / n))
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_virtual_loss_discourages_inflight(seed):
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(2, 10))
+    n = rng.integers(1, 20, a).astype(np.float32)
+    w = (rng.random(a) * n).astype(np.float32)
+    base = uct.uct_scores(jnp.asarray(n), jnp.asarray(w), jnp.zeros(a),
+                          jnp.asarray(n.sum()), 1.0)
+    j = int(rng.integers(0, a))
+    vl = jnp.zeros(a).at[j].set(3)
+    with_vl = uct.uct_scores(jnp.asarray(n), jnp.asarray(w), vl,
+                             jnp.asarray(n.sum()) + 3, 1.0)
+    assert float(with_vl[j]) < float(base[j])
+
+
+# ---------------------------------------------------------------------------
+# sharding rules properties
+# ---------------------------------------------------------------------------
+class _FakeMesh:
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        import numpy as _np
+        self.devices = _np.empty(tuple(sizes.values()))
+
+
+@given(dim=st.integers(1, 4096), model=st.sampled_from([4, 8, 16]),
+       data=st.sampled_from([2, 4, 16]))
+def test_resolve_spec_divisibility(dim, model, data):
+    mesh = _FakeMesh({"data": data, "model": model})
+    spec = resolve_spec(("mlp",), (dim,), mesh, DEFAULT_RULES)
+    if spec and spec[0] is not None:
+        assert dim % model == 0          # only assigned when divisible
+
+
+@given(b=st.sampled_from([1, 2, 8, 32, 256]),
+       s=st.sampled_from([16, 4096, 32768]))
+def test_resolve_spec_never_reuses_axis(b, s):
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = resolve_spec(("batch", "kv_seq", "kv", None), (b, s, 16, 64), mesh,
+                        DEFAULT_RULES)
+    flat = []
+    for p in spec:
+        if p is None:
+            continue
+        flat.extend(p if isinstance(p, tuple) else (p,))
+    assert len(flat) == len(set(flat))   # each mesh axis used at most once
+
+
+# ---------------------------------------------------------------------------
+# quantization round-trip
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2**31 - 1))
+def test_int8_quantization_error_bound(seed):
+    from repro.parallel.collectives import _dequantize_int8, _quantize_int8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=500).astype(np.float32)) * rng.uniform(0.1, 10)
+    q, scale, pad = _quantize_int8(x, block=128)
+    out = _dequantize_int8(q, scale, pad, x.shape, x.dtype)
+    blockmax = float(jnp.abs(x).max())
+    assert float(jnp.abs(out - x).max()) <= blockmax / 127.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 1000), st.integers(0, 5))
+def test_data_pipeline_deterministic(step, seed):
+    from repro.configs import get_smoke_config
+    from repro.data import DataConfig, synthetic_batch
+    cfg = get_smoke_config("smollm-135m")
+    d = DataConfig(seed=seed, batch_size=2, seq_len=32)
+    b1 = synthetic_batch(cfg, d, step)
+    b2 = synthetic_batch(cfg, d, step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # different steps differ
+    b3 = synthetic_batch(cfg, d, step + 1)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])

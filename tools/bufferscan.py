@@ -1,0 +1,45 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Dev tool: top-K largest HLO buffers + op_name for one dry-run cell."""
+import re
+import sys
+
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+DT = {"bf16": 2, "f32": 4, "s32": 4, "u32": 4, "pred": 1, "f16": 2, "s8": 1}
+
+
+def main(arch, shape, topk=8):
+    mesh = make_production_mesh()
+    c = lower_cell(arch, shape, mesh)[0].compile()
+    t = c.as_text()
+    m_an = c.memory_analysis()
+    print(f"{arch} {shape}: temp={m_an.temp_size_in_bytes/1e9:.2f}GB "
+          f"arg={m_an.argument_size_in_bytes/1e9:.2f}GB")
+    seen = {}
+    for m in re.finditer(r"%(\S+) = (\w+)\[([\d,]+)\][^ ]* ([\w\-]+)\(", t):
+        name, dt, dims, op = m.groups()
+        if dt not in DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        sz = n * DT[dt]
+        key = f"{dt}[{dims}]"
+        if sz > 0.2e9:
+            seen.setdefault(key, [sz, set(), name])[1].add(op)
+    rows = sorted(seen.items(), key=lambda kv: -kv[1][0])[:topk]
+    for k, (sz, ops, name) in rows:
+        meta = ""
+        for line in t.splitlines():
+            if k in line and "op_name" in line:
+                mm = re.search(r'op_name="([^"]+)"', line)
+                if mm:
+                    meta = mm.group(1)[-110:]
+                    break
+        print(f"  {sz/1e9:7.2f}GB {k:42s} {meta}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2], int(sys.argv[3]) if len(sys.argv) > 3 else 8)

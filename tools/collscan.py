@@ -1,0 +1,69 @@
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Dev tool: rank collective ops by loop-aware link bytes for one cell."""
+import re, sys
+from collections import defaultdict
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis as H
+
+
+def main(arch, shape, topk=12):
+    mesh = make_production_mesh()
+    c = lower_cell(arch, shape, mesh)[0].compile()
+    t = c.as_text()
+    comps = H._parse_computations(t)
+    syms = {cn: {i.name: i.rtype for i in ins} for cn, ins in comps.items()}
+    # find trips per computation by walking whiles from entry
+    entry = None
+    for line in t.splitlines():
+        if line.startswith("ENTRY"):
+            m = H._COMP_HEAD_RE.match(line.replace("ENTRY ", "").strip())
+            entry = m.group(1) if m else None
+            break
+    mult = defaultdict(lambda: 0.0)
+    mult[entry] = 1.0
+
+    def walk(cn, m):
+        for ins in comps.get(cn, []):
+            if ins.op == "while":
+                mm = H._COND_BODY_RE.search(ins.rest)
+                if mm:
+                    trips = H._trip_count(comps.get(mm.group(1), []))
+                    mult[mm.group(2)] += m * trips
+                    walk(mm.group(2), m * trips)
+            elif ins.op == "call":
+                mm = H._TO_APPLY_RE.search(ins.rest)
+                if mm:
+                    mult[mm.group(1)] += m
+                    walk(mm.group(1), m)
+    walk(entry, 1.0)
+
+    rows = []
+    for cn, ins_list in comps.items():
+        m = mult.get(cn, 0.0)
+        if m <= 0:
+            continue
+        for ins in ins_list:
+            kind = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if kind not in H.COLLECTIVE_OPS:
+                continue
+            size = H._shape_bytes(ins.rtype)
+            g = H._group_size(ins.rest, 256)
+            ring = (g - 1) / g if g > 1 else 0.0
+            link = {"all-reduce": 2 * size * ring, "all-gather": size * ring,
+                    "reduce-scatter": size * g * ring, "all-to-all": size * ring,
+                    "collective-permute": size}[kind]
+            meta = re.search(r'op_name="([^"]+)"', ins.rest)
+            rows.append((link * m, kind, ins.rtype[:38], m,
+                         (meta.group(1) if meta else "")[-90:]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"{arch} {shape}: total link bytes/dev = {total/1e9:.1f} GB")
+    for link, kind, shape_, m, meta in rows[:topk]:
+        print(f"  {link/1e9:8.2f}GB x{m:5.0f} {kind:18s} {shape_:40s} {meta}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2], int(sys.argv[3]) if len(sys.argv) > 3 else 12)

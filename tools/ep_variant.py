@@ -1,0 +1,35 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf D3: deepseek train_4k with explicit shard_map expert parallelism.
+
+Reproduces the EXPERIMENTS.md D3 measurement: moe_impl='ep' + rules
+{experts->model, no FSDP}. Compare against the default-sweep D2 record.
+"""
+import time
+
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import DEFAULT_RULES
+import repro.configs.deepseek_v2_lite_16b as DS
+
+
+def main():
+    rules = dict(DEFAULT_RULES)
+    rules["experts"] = (("model",),)
+    rules["embed"] = ()
+    DS.CONFIG = DS.CONFIG.replace(moe_impl="ep")
+    mesh = make_production_mesh()
+    t0 = time.time()
+    lowered, _ = lower_cell("deepseek-v2-lite-16b", "train_4k", mesh, rules)
+    c = lowered.compile()
+    m = c.memory_analysis()
+    costs = hlo_analysis.analyze_module(c.as_text(), 256)
+    print(f"compile {time.time()-t0:.0f}s args {m.argument_size_in_bytes/1e9:.2f}GB "
+          f"temp {m.temp_size_in_bytes/1e9:.1f}GB flops/dev {costs.flops:.3e} "
+          f"link/dev {costs.link_bytes/1e9:.1f}GB")
+    print("schedule:", hlo_analysis.schedule_summary(costs.collectives))
+
+
+if __name__ == "__main__":
+    main()
