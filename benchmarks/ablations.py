@@ -17,9 +17,7 @@ import numpy as np
 
 from repro.core.domains.pgame import PGameDomain, optimal_root_action
 from repro.core.metrics import strength
-from repro.core.pipeline import PipelineConfig, run_pipeline
-from repro.core.stages import SearchParams
-from repro.core.tree import root_action_by_visits
+from repro.search import SearchConfig, SearchParams, search
 
 DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=5)
 BUDGET = 256
@@ -27,14 +25,14 @@ SEEDS = 10
 
 
 def _strength_dup(sp, lanes):
-    cfg = PipelineConfig(budget=BUDGET, lanes=lanes, params=sp)
-    f = jax.jit(lambda r: (root_action_by_visits(run_pipeline(DOM, cfg, r)[0]),
-                           run_pipeline(DOM, cfg, r)[1]["duplicates"]))
+    cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=lanes,
+                       params=sp, keep_tree=False)
+    f = jax.jit(lambda r: search(DOM, cfg, r))
     acts, dups = [], []
     for s in range(SEEDS):
-        a, d = f(jax.random.key(s))
-        acts.append(int(a))
-        dups.append(int(d))
+        res = f(jax.random.key(s))
+        acts.append(int(res.best_action))
+        dups.append(int(res.stats["duplicates"]))
     return strength(acts, optimal_root_action(DOM)), float(np.mean(dups)) / BUDGET
 
 

@@ -1,5 +1,7 @@
 """MCTS-LM decode throughput (the paper's technique as a serving feature):
-playouts/s of the pipelined search over a tiny LM evaluator, lanes sweep —
+playouts/s of the pipelined search over a tiny LM evaluator through the
+unified ``repro.search`` API — lanes sweep, plus batched multi-root search
+(``search_batch``) over several decode requests in one device program —
 the modern instantiation where Playout = NN evaluation (DESIGN.md §2)."""
 from __future__ import annotations
 
@@ -9,9 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.domains.lm_decode import LMDecodeDomain
-from repro.core.pipeline import PipelineConfig, run_pipeline
-from repro.core.stages import SearchParams
 from repro.models.base import ModelConfig, get_family
+from repro.search import SearchConfig, SearchParams, search, search_batch
 
 CFG = ModelConfig(name="bench-lm", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
@@ -22,16 +23,34 @@ BUDGET = 48
 def run(report):
     fam = get_family(CFG)
     params = fam.init(CFG, jax.random.key(0))
-    dom = LMDecodeDomain(cfg=CFG, params=params,
-                         prompt=jnp.array([1, 2, 3, 4], jnp.int32),
-                         num_actions=4, search_depth=6, rollout_len=3)
+
+    def domain(prompt):
+        return LMDecodeDomain(cfg=CFG, params=params,
+                              prompt=jnp.asarray(prompt, jnp.int32),
+                              num_actions=4, search_depth=6, rollout_len=3)
+
+    dom = domain([1, 2, 3, 4])
     sp = SearchParams(cp=1.0, max_depth=6, puct=True)
     for lanes in (1, 2, 4, 8):
-        cfg = PipelineConfig(budget=BUDGET, lanes=lanes, params=sp)
-        f = jax.jit(lambda r: run_pipeline(dom, cfg, r)[0]["visits"])
+        cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=lanes,
+                           params=sp, keep_tree=False)
+        f = jax.jit(lambda r: search(dom, cfg, r).action_visits)
         f(jax.random.key(0))
         t0 = time.perf_counter()
         jax.block_until_ready(f(jax.random.key(1)))
         dt = time.perf_counter() - t0
         report(f"mcts_lm_decode_lanes{lanes}", dt * 1e6,
                f"playouts_per_s={BUDGET / dt:,.1f}")
+
+    # batched multi-root: 4 decode requests (distinct prompts), one program
+    doms = [domain(p) for p in ([1, 2, 3, 4], [5, 6, 7, 8],
+                                [9, 10, 11, 12], [2, 4, 6, 8])]
+    cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=4,
+                       params=sp, keep_tree=False)
+    f = jax.jit(lambda r: search_batch(doms, cfg, r).action_visits)
+    f(jax.random.key(0))
+    t0 = time.perf_counter()
+    jax.block_until_ready(f(jax.random.key(1)))
+    dt = time.perf_counter() - t0
+    report("mcts_lm_decode_batch4", dt * 1e6,
+           f"total_playouts_per_s={4 * BUDGET / dt:,.1f}")

@@ -1,5 +1,7 @@
 """Playout-speedup (paper §II def. 1): wall-clock playouts/s of the batched
-pipeline vs the sequential baseline on the P-game domain, sweeping lanes.
+pipeline vs the sequential baseline on the P-game domain, sweeping lanes;
+plus batched multi-root scaling (``search_batch``: B independent searches in
+one device program, the serving fan-out primitive).
 
 On CPU the parallel playout stage vectorizes across lanes (the TPU analogue
 is data-axis sharding), so playouts/s growing with lanes is the real,
@@ -12,9 +14,7 @@ import time
 import jax
 
 from repro.core.domains.pgame import PGameDomain
-from repro.core.pipeline import PipelineConfig, run_pipeline
-from repro.core.sequential import run_sequential
-from repro.core.stages import SearchParams
+from repro.search import SearchConfig, SearchParams, search, search_batch
 
 DOM = PGameDomain(num_actions=4, game_depth=8, binary_reward=False, seed=1)
 SP = SearchParams(cp=0.7, max_depth=8)
@@ -30,13 +30,25 @@ def _time(f, *args, reps=3):
 
 
 def run(report):
-    seq = jax.jit(lambda r: run_sequential(DOM, SP, BUDGET, r)[0]["visits"])
+    seq_cfg = SearchConfig(method="sequential", budget=BUDGET, params=SP,
+                           keep_tree=False)
+    seq = jax.jit(lambda r: search(DOM, seq_cfg, r).action_visits)
     t_seq = _time(seq, jax.random.key(0))
     report("sequential_512playouts", t_seq * 1e6,
            f"playouts_per_s={BUDGET / t_seq:,.0f}")
     for lanes in (1, 2, 4, 8, 16):
-        cfg = PipelineConfig(budget=BUDGET, lanes=lanes, params=SP)
-        pipe = jax.jit(lambda r: run_pipeline(DOM, cfg, r)[0]["visits"])
+        cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=lanes,
+                           params=SP, keep_tree=False)
+        pipe = jax.jit(lambda r: search(DOM, cfg, r).action_visits)
         t = _time(pipe, jax.random.key(0))
         report(f"pipeline_lanes{lanes}_512playouts", t * 1e6,
                f"playouts_per_s={BUDGET / t:,.0f} speedup_vs_seq={t_seq / t:.2f}x")
+
+    # batched multi-root: B independent pipelines in one XLA program
+    cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=8, params=SP,
+                       keep_tree=False)
+    for b in (1, 4, 16):
+        fn = jax.jit(lambda r: search_batch([DOM] * b, cfg, r).action_visits)
+        t = _time(fn, jax.random.key(0))
+        report(f"search_batch_B{b}_512playouts", t * 1e6,
+               f"total_playouts_per_s={b * BUDGET / t:,.0f}")

@@ -1,21 +1,17 @@
 """Search overhead (paper §III-B): budget_parallel / budget_sequential to
 reach a target strength, from strength-vs-budget curves; plus the direct
-in-flight duplicate-rate signal vs concurrency.
+in-flight duplicate-rate signal vs concurrency.  All strategies go through
+the unified ``repro.search`` API.
 """
 from __future__ import annotations
 
 import time
 
 import jax
-import numpy as np
 
 from repro.core.domains.pgame import PGameDomain, optimal_root_action
 from repro.core.metrics import search_overhead, strength
-from repro.core.pipeline import PipelineConfig, run_pipeline
-from repro.core.sequential import run_sequential
-from repro.core.stages import SearchParams
-from repro.core.tree import root_action_by_visits
-from repro.core.tree_parallel import run_tree_parallel
+from repro.search import SearchConfig, SearchParams, search
 
 DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=11)
 SP = SearchParams(cp=0.7, max_depth=6)
@@ -24,10 +20,12 @@ SEEDS = 12
 TARGET = 0.7
 
 
-def _curve(make_fn):
+def _curve(method, lanes):
     curve = {}
     for b in BUDGETS:
-        fn = jax.jit(make_fn(b))
+        cfg = SearchConfig(method=method, budget=b, lanes=lanes, params=SP,
+                           keep_tree=False)
+        fn = jax.jit(lambda r: search(DOM, cfg, r).best_action)
         acts = [int(fn(jax.random.key(s))) for s in range(SEEDS)]
         curve[b] = strength(acts, optimal_root_action(DOM))
     return curve
@@ -35,22 +33,19 @@ def _curve(make_fn):
 
 def run(report):
     t0 = time.perf_counter()
-    seq = _curve(lambda b: (lambda r: root_action_by_visits(
-        run_sequential(DOM, SP, b, r)[0])))
+    seq = _curve("sequential", 1)
     report("seq_strength_curve", (time.perf_counter() - t0) * 1e6,
            " ".join(f"{b}:{s:.2f}" for b, s in seq.items()))
 
     for lanes in (4, 16):
-        pipe = _curve(lambda b: (lambda r: root_action_by_visits(
-            run_pipeline(DOM, PipelineConfig(budget=b, lanes=lanes, params=SP), r)[0])))
+        pipe = _curve("pipeline", lanes)
         so = search_overhead(seq, pipe, TARGET)
         report(f"pipeline_lanes{lanes}_overhead", 0.0,
                f"SO@{TARGET}={so:.2f} curve=" +
                " ".join(f"{b}:{s:.2f}" for b, s in pipe.items()))
 
     for threads in (16, 64):
-        tp = _curve(lambda b: (lambda r: root_action_by_visits(
-            run_tree_parallel(DOM, SP, b, threads, r)[0])))
+        tp = _curve("tree", threads)
         so = search_overhead(seq, tp, TARGET)
         report(f"tree_parallel_t{threads}_overhead", 0.0,
                f"SO@{TARGET}={so:.2f} curve=" +

@@ -1,9 +1,10 @@
 """Strength-speedup + search overhead (paper §II def. 2, §III-B).
 
 At a fixed playout budget, measures the fraction of seeds whose recommended
-root action is optimal (exact enumeration oracle), for: sequential, the
-pipeline (varying in-flight lanes), tree parallelization with virtual loss
-(varying threads), root and leaf parallelization — the paper's §IV baselines.
+root action is optimal (exact enumeration oracle), for every registered
+strategy via the unified ``repro.search`` API: sequential, the pipeline
+(varying in-flight lanes), tree parallelization with virtual loss (varying
+threads), root and leaf parallelization — the paper's §IV baselines.
 
 The paper's claim: the pipeline holds strength near sequential (bounded
 in-flight window) where tree parallelization degrades with threads.
@@ -16,14 +17,8 @@ import jax
 import numpy as np
 
 from repro.core.domains.pgame import PGameDomain, optimal_root_action
-from repro.core.leaf_parallel import run_leaf_parallel
 from repro.core.metrics import duplicate_rate, strength
-from repro.core.pipeline import PipelineConfig, run_pipeline
-from repro.core.root_parallel import root_parallel_action, run_root_parallel
-from repro.core.sequential import run_sequential
-from repro.core.stages import SearchParams
-from repro.core.tree import root_action_by_visits
-from repro.core.tree_parallel import run_tree_parallel
+from repro.search import SearchConfig, SearchParams, search
 
 DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
 SP = SearchParams(cp=0.7, max_depth=6)
@@ -34,41 +29,27 @@ SEEDS = 16
 def run(report):
     opt = optimal_root_action(DOM)
 
-    def bench(name, fn, extra=""):
+    def bench(name, method, lanes):
+        cfg = SearchConfig(method=method, budget=BUDGET, lanes=lanes,
+                           params=SP, keep_tree=False)
+        fn = jax.jit(lambda r: search(DOM, cfg, r))
         t0 = time.perf_counter()
         actions, dups = [], []
         for s in range(SEEDS):
-            a, d = fn(jax.random.key(s))
-            actions.append(int(a))
-            dups.append(int(d))
+            res = fn(jax.random.key(s))
+            actions.append(int(res.best_action))
+            dups.append(int(res.stats["duplicates"]))
         us = (time.perf_counter() - t0) * 1e6 / SEEDS
         st = strength(actions, opt)
         report(name, us, f"strength={st:.2f} dup_rate="
-                         f"{duplicate_rate(int(np.mean(dups)), BUDGET):.3f}{extra}")
+                         f"{duplicate_rate(int(np.mean(dups)), BUDGET):.3f}")
         return st
 
-    seq_j = jax.jit(lambda r: (root_action_by_visits(run_sequential(DOM, SP, BUDGET, r)[0]),
-                               jax.numpy.int32(0)))
-    st_seq = bench("sequential", lambda r: seq_j(r))
-
+    bench("sequential", "sequential", 1)
     for lanes in (2, 4, 8, 16):
-        cfg = PipelineConfig(budget=BUDGET, lanes=lanes, params=SP)
-        pj = jax.jit(lambda r: (
-            root_action_by_visits(run_pipeline(DOM, cfg, r)[0]),
-            run_pipeline(DOM, cfg, r)[1]["duplicates"]))
-        st = bench(f"pipeline_lanes{lanes}", pj,
-                   extra=f" strength_speedup={0.0 if st_seq == 0 else 0.0:.0f}")
+        bench(f"pipeline_lanes{lanes}", "pipeline", lanes)
     for threads in (8, 16, 32, 64):
-        tj = jax.jit(lambda r: (
-            root_action_by_visits(run_tree_parallel(DOM, SP, BUDGET, threads, r)[0]),
-            run_tree_parallel(DOM, SP, BUDGET, threads, r)[1]["duplicates"]))
-        bench(f"tree_parallel_t{threads}", tj)
+        bench(f"tree_parallel_t{threads}", "tree", threads)
     for workers in (4, 16):
-        rj = jax.jit(lambda r: (
-            root_parallel_action(run_root_parallel(DOM, SP, BUDGET, workers, r)[0]),
-            jax.numpy.int32(0)))
-        bench(f"root_parallel_w{workers}", rj)
-    lj = jax.jit(lambda r: (
-        root_action_by_visits(run_leaf_parallel(DOM, SP, BUDGET, 4, r)[0]),
-        jax.numpy.int32(0)))
-    bench("leaf_parallel_w4", lj)
+        bench(f"root_parallel_w{workers}", "root", workers)
+    bench("leaf_parallel_w4", "leaf", 4)

@@ -1,18 +1,18 @@
-"""Quickstart: pipelined MCTS on a synthetic P-game tree.
+"""Quickstart: the unified search API on a synthetic P-game tree.
 
-Runs the paper's linear pipeline (lanes=1) and nonlinear pipeline (lanes=8)
-against the sequential baseline at equal budget, and prints strength vs the
-exact enumeration oracle plus the in-flight duplicate rate (search overhead).
+Runs every registered strategy (sequential baseline, the paper's §IV
+baselines, and the paper's pipelined MCTS) at equal budget through ONE entry
+point — ``repro.search.search`` — and prints the recommended action vs the
+exact enumeration oracle plus the common stats schema.  Finishes with a
+batched multi-root search (``search_batch``): 4 independent searches in one
+device program.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
 from repro.core.domains.pgame import PGameDomain, enumerate_root_values, optimal_root_action
-from repro.core.pipeline import PipelineConfig, run_pipeline
-from repro.core.sequential import run_sequential
-from repro.core.stages import SearchParams
-from repro.core.tree import root_action_by_visits
+from repro.search import SearchConfig, SearchParams, search, search_batch
 
 
 def main():
@@ -24,18 +24,27 @@ def main():
     sp = SearchParams(cp=0.7, max_depth=6)
     budget = 256
 
-    tree, _ = jax.jit(lambda r: run_sequential(dom, sp, budget, r))(jax.random.key(0))
-    print(f"sequential      : action={int(root_action_by_visits(tree))} "
-          f"(budget {budget})")
+    for method, lanes in (("sequential", 1), ("root", 4), ("leaf", 4),
+                          ("tree", 8), ("pipeline", 1), ("pipeline", 8)):
+        cfg = SearchConfig(method=method, budget=budget, lanes=lanes, params=sp)
+        res = jax.jit(lambda r: search(dom, cfg, r))(jax.random.key(0))
+        extra = ""
+        if method == "pipeline":
+            kind = "linear" if lanes == 1 else "nonlinear"
+            extra = (f" occupancy={float(res.extras['mean_occupancy']):.2f}"
+                     f" ({kind})")
+        print(f"{method:<10} lanes={lanes:<2}: action={int(res.best_action)} "
+              f"playouts={int(res.stats['playouts'])} "
+              f"duplicates={int(res.stats['duplicates'])}"
+              f"{extra}")
 
-    for lanes in (1, 8):
-        cfg = PipelineConfig(budget=budget, lanes=lanes, params=sp)
-        tree, stats = jax.jit(lambda r: run_pipeline(dom, cfg, r))(jax.random.key(0))
-        kind = "linear   " if lanes == 1 else "nonlinear"
-        print(f"pipeline {kind}: action={int(root_action_by_visits(tree))} "
-              f"playouts={int(stats['playouts'])} "
-              f"duplicates={int(stats['duplicates'])} "
-              f"occupancy={float(stats['mean_occupancy']):.2f}")
+    # batched multi-root search: 4 independent pipelines, one XLA program
+    cfg = SearchConfig(method="pipeline", budget=budget, lanes=8, params=sp,
+                       keep_tree=False)
+    bres = search_batch([dom] * 4, cfg, jax.random.key(1))
+    print(f"\nsearch_batch(B=4): actions="
+          f"{[int(a) for a in bres.best_action]} "
+          f"playouts={[int(p) for p in bres.stats['playouts']]}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
+# NOTE: run_pipeline/run_sequential (and the other run_* runners) are
+# deprecated shims — new code should import from repro.search instead.
 from repro.core.pipeline import PipelineConfig, run_pipeline  # noqa: F401
 from repro.core.sequential import run_sequential  # noqa: F401
 from repro.core.stages import SearchParams  # noqa: F401

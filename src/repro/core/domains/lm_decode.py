@@ -25,11 +25,15 @@ from repro.models.base import ModelConfig, get_family
 class LMDecodeDomain:
     cfg: ModelConfig
     params: Any
-    prompt: Any                       # [prompt_len] int32
+    prompt: Any                       # [buf_len] int32 (padded buffer OK)
     num_actions: int = 4
     search_depth: int = 8             # max new tokens explored by the tree
     rollout_len: int = 4
     temperature: float = 1.0
+    prompt_len: Any = None            # optional (traced) true prefix length;
+                                      # None -> prompt.shape[0].  Lets batched
+                                      # serving share one padded buffer shape
+                                      # across requests of different lengths.
 
     def __post_init__(self):
         object.__setattr__(self, "_fam", get_family(self.cfg))
@@ -38,10 +42,15 @@ class LMDecodeDomain:
     def max_len(self) -> int:
         return int(self.prompt.shape[0]) + self.search_depth + self.rollout_len
 
+    def _plen(self):
+        if self.prompt_len is None:
+            return jnp.int32(self.prompt.shape[0])
+        return jnp.asarray(self.prompt_len, jnp.int32)
+
     def root_state(self):
         toks = jnp.zeros((self.max_len,), jnp.int32)
         toks = jax.lax.dynamic_update_slice(toks, self.prompt.astype(jnp.int32), (0,))
-        return {"toks": toks, "len": jnp.int32(self.prompt.shape[0])}
+        return {"toks": toks, "len": self._plen()}
 
     # -- internals ----------------------------------------------------------
     def _last_logits(self, toks, ln):
@@ -60,7 +69,7 @@ class LMDecodeDomain:
         return {"toks": toks, "len": state["len"] + 1}
 
     def is_terminal(self, state):
-        return state["len"] >= self.prompt.shape[0] + self.search_depth
+        return state["len"] >= self._plen() + self.search_depth
 
     def playout(self, state, rng):
         """Greedy rollout; reward = exp(mean next-token logprob)."""

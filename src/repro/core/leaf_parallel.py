@@ -1,41 +1,29 @@
-"""Leaf parallelization — the §IV baseline (Chaslot et al.).
+"""DEPRECATED shim — use ``repro.search``:
 
-One trajectory at a time (sequential S/E), but ``workers`` playouts from the
-same leaf in parallel; backup aggregates all of them.  No selection
-staleness, but the information per playout is lower (all rollouts share one
-leaf) and S/E stay serial — limited strength- and playout-speedup.
+    search(domain, SearchConfig(method="leaf", budget=b, lanes=workers,
+                                params=sp), rng)
+
+The canonical implementation lives in ``repro.search.strategies``.  Note the
+trailing parameter is now spelled ``max_nodes`` (the seed's ``max_nodes_``
+inconsistency is gone; DESIGN.md §6 migration table).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import stages as S
-from repro.core.tree import Tree, init_tree, max_nodes
+from repro.core.tree import Tree
 
 
 def run_leaf_parallel(domain, sp: S.SearchParams, budget: int, workers: int,
-                      rng, max_nodes_: int = 0) -> Tuple[Tree, dict]:
-    iters = -(-budget // workers)
-    tree = init_tree(domain, max_nodes_ or iters + 2)
-
-    def it(tree, rng_t):
-        tree, sel = S.select_one(tree, sp, jnp.asarray(True))
-        tree, exp = S.expand_one(tree, domain, sp, sel)
-        values = jax.vmap(lambda r: domain.playout(exp["state"], r))(
-            jax.random.split(rng_t, workers))
-        v_sum = values.sum()
-        # aggregate backup: n += workers, w += sum(values) along the path
-        paths = exp["path"]
-        mask = paths >= 0
-        idx = jnp.maximum(paths, 0)
-        tree = dict(tree)
-        tree["visits"] = tree["visits"].at[idx].add(mask * workers)
-        tree["value"] = tree["value"].at[idx].add(jnp.where(mask, v_sum, 0.0))
-        tree["vloss"] = tree["vloss"].at[idx].add(-mask.astype(jnp.int32))
-        return tree, None
-
-    tree, _ = jax.lax.scan(it, tree, jax.random.split(rng, iters))
-    return tree, {"playouts": jnp.int32(iters * workers)}
+                      rng, max_nodes: int = 0) -> Tuple[Tree, dict]:
+    warnings.warn(
+        "run_leaf_parallel is deprecated; use repro.search.search(domain, "
+        "SearchConfig(method='leaf', lanes=workers, ...), rng)",
+        DeprecationWarning, stacklevel=2)
+    from repro.search.api import SearchConfig, search
+    res = search(domain, SearchConfig(method="leaf", budget=budget,
+                                      lanes=workers, max_nodes=max_nodes,
+                                      params=sp), rng)
+    return res.tree, {"playouts": res.stats["playouts_completed"]}

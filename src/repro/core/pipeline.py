@@ -1,35 +1,29 @@
-"""The paper's contribution: pipelined MCTS (linear + nonlinear).
+"""DEPRECATED shim — use ``repro.search``:
 
-Software-pipelined execution of the four OLT stages over in-flight waves
-(DESIGN.md §2).  One scan tick co-schedules:
+    search(domain, SearchConfig(method="pipeline", budget=b, lanes=l,
+                                params=sp), rng)
 
-    tick t:   B(wave t-3) | P(wave t-2) | E(wave t-1) | S(wave t)
-
-so K = 4 waves are in flight — the pipeline depth of Fig. 2.  A wave carries
-``lanes`` trajectories: lanes == 1 reproduces the *linear* pipeline (Fig. 3);
-lanes > 1 is the *nonlinear* pipeline with ``lanes`` parallel playout stages
-(Fig. 5/6), mapped to batched/sharded NN or rollout evaluation on TPU.
-
-Search overhead is bounded by the in-flight window: Select at tick t sees all
-backups from waves <= t-3 (the ILD compromise of §V-A), unlike tree
-parallelization where staleness grows with thread count.
+The paper's pipelined MCTS implementation lives in
+``repro.search.strategies.pipeline`` (see DESIGN.md §2 for the design and
+§6 for the migration table).  ``PipelineConfig``/``run_pipeline`` are kept
+for one release so existing callers keep working.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import stages as S
-from repro.core.tree import Tree, init_tree
-
-PIPE_STAGES = 4          # S, E, P, B
+from repro.core.tree import Tree
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
+    """Deprecated — use repro.search.SearchConfig(method="pipeline")."""
+
     budget: int = 256            # total playouts
     lanes: int = 1               # parallel playout stages (1 = linear pipeline)
     max_nodes: int = 0           # 0 -> budget + 2
@@ -46,51 +40,22 @@ class PipelineConfig:
 
 def run_pipeline(domain, cfg: PipelineConfig, rng) -> Tuple[Tree, Dict[str, Any]]:
     """Returns (final tree, stats). Fully jit-compatible."""
-    sp = cfg.params
-    lanes = cfg.lanes
-    tree = init_tree(domain, cfg.nodes)
-    n_ticks = cfg.n_waves + (PIPE_STAGES - 1)       # fill + drain
-
-    init_carry = (
-        tree,
-        S.empty_selection(sp, lanes),                       # S -> E buffer
-        S.empty_expansion(sp, lanes, domain),               # E -> P buffer
-        S.empty_playout(sp, lanes, domain.num_actions),     # P -> B buffer
-    )
-
-    def tick(carry, inp):
-        t, rng_t = inp
-        tree, buf_se, buf_ep, buf_pb = carry
-        # Backup stage — wave t-3 (oldest in flight)
-        tree = S.backup_wave(tree, buf_pb)
-        # Playout stage — wave t-2 (parallel lanes)
-        new_pb = S.playout_wave(domain, sp, buf_ep, rng_t)
-        # Expand stage — wave t-1
-        tree, new_ep = S.expand_wave(tree, domain, sp, buf_se)
-        # Select stage — wave t (masked during drain)
-        wave_valid = t < cfg.n_waves
-        tree, new_se = S.select_wave(tree, sp, lanes, wave_valid)
-        stats = {
-            "dup": new_se["dup"].sum(),
-            "completed": buf_pb["valid"].sum(),
-            "occupancy": (new_se["valid"].any().astype(jnp.int32)
-                          + buf_se["valid"].any().astype(jnp.int32)
-                          + buf_ep["valid"].any().astype(jnp.int32)
-                          + buf_pb["valid"].any().astype(jnp.int32)),
-        }
-        return (tree, new_se, new_ep, new_pb), stats
-
-    rngs = jax.random.split(rng, n_ticks)
-    ts = jnp.arange(n_ticks)
-    (tree, *_), stats = jax.lax.scan(tick, init_carry, (ts, rngs))
-    out_stats = {
-        "duplicates": stats["dup"].sum(),
-        "playouts": stats["completed"].sum(),
-        "ticks": jnp.int32(n_ticks),
-        "mean_occupancy": stats["occupancy"].mean() / PIPE_STAGES,
-        "dup_per_tick": stats["dup"],
+    warnings.warn(
+        "run_pipeline is deprecated; use repro.search.search(domain, "
+        "SearchConfig(method='pipeline', ...), rng)",
+        DeprecationWarning, stacklevel=2)
+    from repro.search.api import SearchConfig, search
+    res = search(domain, SearchConfig(method="pipeline", budget=cfg.budget,
+                                      lanes=cfg.lanes, max_nodes=cfg.max_nodes,
+                                      params=cfg.params), rng)
+    stats = {
+        "duplicates": res.stats["duplicates"],
+        "playouts": res.stats["playouts_completed"],
+        "ticks": res.stats["ticks"],
+        "mean_occupancy": res.extras["mean_occupancy"],
+        "dup_per_tick": res.extras["dup_per_tick"],
     }
-    return tree, out_stats
+    return res.tree, stats
 
 
 def run_pipeline_jit(domain, cfg: PipelineConfig, rng):

@@ -1,38 +1,35 @@
-"""Root parallelization / Ensemble UCT — the §IV baseline (Chaslot; Fern&Lewis).
+"""DEPRECATED shim — use ``repro.search``:
 
-``workers`` independent sequential searches (no sharing, zero communication),
-root statistics summed at the end.  Perfect playout-speedup, but each worker
-only sees budget/workers playouts — strength saturates (Soejima et al.).
+    search(domain, SearchConfig(method="root", budget=b, lanes=workers,
+                                params=sp), rng)
+
+The canonical implementation lives in ``repro.search.strategies``; the new
+API returns a normalized ``SearchResult`` instead of this shim's legacy
+(root-stats dict, stats) pair (DESIGN.md §6 migration table).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import stages as S
-from repro.core.sequential import run_sequential
-from repro.core.tree import ROOT
 
 
 def run_root_parallel(domain, sp: S.SearchParams, budget: int, workers: int,
                       rng) -> Tuple[dict, dict]:
     """Returns (combined root stats {action_visits, action_value}, stats)."""
-    per = -(-budget // workers)
-
-    def one(r):
-        tree, _ = run_sequential(domain, sp, per, r)
-        ch = tree["children"][ROOT]
-        valid = ch >= 0
-        idx = jnp.maximum(ch, 0)
-        n = jnp.where(valid, tree["visits"][idx], 0)
-        w = jnp.where(valid, tree["value"][idx], 0.0)
-        return n, w
-
-    ns, ws = jax.vmap(one)(jax.random.split(rng, workers))
-    return ({"action_visits": ns.sum(0), "action_value": ws.sum(0)},
-            {"playouts": jnp.int32(per * workers)})
+    warnings.warn(
+        "run_root_parallel is deprecated; use repro.search.search(domain, "
+        "SearchConfig(method='root', lanes=workers, ...), rng)",
+        DeprecationWarning, stacklevel=2)
+    from repro.search.api import SearchConfig, search
+    res = search(domain, SearchConfig(method="root", budget=budget,
+                                      lanes=workers, params=sp), rng)
+    return ({"action_visits": res.action_visits,
+             "action_value": res.action_value},
+            {"playouts": res.stats["playouts_completed"]})
 
 
 def root_parallel_action(combined) -> jnp.ndarray:

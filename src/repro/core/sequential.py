@@ -1,32 +1,28 @@
-"""Sequential MCTS baseline — the paper's Fig. 1 flow (S→E→P→B per iteration).
+"""DEPRECATED shim — use ``repro.search``:
 
-This is the strength reference: every parallelization's strength-speedup and
-search overhead are measured against this at equal budget.
+    search(domain, SearchConfig(method="sequential", budget=b, params=sp), rng)
+
+The canonical implementation lives in ``repro.search.strategies``; this
+wrapper preserves the seed repo's ``run_sequential`` signature and return
+shape for one release (DESIGN.md §6 migration table).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import stages as S
-from repro.core.tree import Tree, init_tree
+from repro.core.tree import Tree
 
 
 def run_sequential(domain, sp: S.SearchParams, budget: int, rng,
                    max_nodes: int = 0) -> Tuple[Tree, dict]:
-    tree = init_tree(domain, max_nodes or budget + 2)
-    valid = jnp.asarray(True)
-
-    def it(tree, rng_t):
-        tree, sel = S.select_one(tree, sp, valid)
-        tree, exp = S.expand_one(tree, domain, sp, sel)
-        po = S.playout_wave(
-            domain, sp,
-            jax.tree_util.tree_map(lambda x: x[None], exp), rng_t)
-        tree = S.backup_wave(tree, po)
-        return tree, po["value"][0]
-
-    tree, values = jax.lax.scan(it, tree, jax.random.split(rng, budget))
-    return tree, {"playouts": jnp.int32(budget), "values": values}
+    warnings.warn(
+        "run_sequential is deprecated; use repro.search.search(domain, "
+        "SearchConfig(method='sequential', ...), rng)",
+        DeprecationWarning, stacklevel=2)
+    from repro.search.api import SearchConfig, search
+    res = search(domain, SearchConfig(method="sequential", budget=budget,
+                                      max_nodes=max_nodes, params=sp), rng)
+    return res.tree, {"playouts": res.stats["playouts_completed"],
+                      "values": res.extras["values"]}

@@ -1,34 +1,29 @@
-"""Tree parallelization with virtual loss — the §IV baseline (Chaslot et al.).
+"""DEPRECATED shim — use ``repro.search``:
 
-Synchronous shared-tree parallelism: per round, ``threads`` trajectories are
-selected (with virtual loss), expanded, played out in parallel, and backed up
-together.  Staleness grows with ``threads`` (every trajectory in a round is
-selected before ANY of the round's backups) — this is the search-overhead
-regime the paper's pipeline bounds by its fixed in-flight window.
+    search(domain, SearchConfig(method="tree", budget=b, lanes=threads,
+                                params=sp), rng)
+
+The canonical implementation lives in ``repro.search.strategies``
+(DESIGN.md §6 migration table).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import stages as S
-from repro.core.tree import Tree, init_tree
+from repro.core.tree import Tree
 
 
 def run_tree_parallel(domain, sp: S.SearchParams, budget: int, threads: int,
                       rng, max_nodes: int = 0) -> Tuple[Tree, dict]:
-    rounds = -(-budget // threads)
-    tree = init_tree(domain, max_nodes or rounds * threads + 2)
-
-    def round_fn(tree, rng_t):
-        tree, sels = S.select_wave(tree, sp, threads, jnp.asarray(True))
-        tree, exps = S.expand_wave(tree, domain, sp, sels)
-        po = S.playout_wave(domain, sp, exps, rng_t)
-        tree = S.backup_wave(tree, po)
-        return tree, {"dup": sels["dup"].sum()}
-
-    tree, stats = jax.lax.scan(round_fn, tree, jax.random.split(rng, rounds))
-    return tree, {"playouts": jnp.int32(rounds * threads),
-                  "duplicates": stats["dup"].sum()}
+    warnings.warn(
+        "run_tree_parallel is deprecated; use repro.search.search(domain, "
+        "SearchConfig(method='tree', lanes=threads, ...), rng)",
+        DeprecationWarning, stacklevel=2)
+    from repro.search.api import SearchConfig, search
+    res = search(domain, SearchConfig(method="tree", budget=budget,
+                                      lanes=threads, max_nodes=max_nodes,
+                                      params=sp), rng)
+    return res.tree, {"playouts": res.stats["playouts_completed"],
+                      "duplicates": res.stats["duplicates"]}

@@ -16,7 +16,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.parallel.compat import axis_size, shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -24,7 +24,7 @@ from jax import shard_map
 # ---------------------------------------------------------------------------
 def ring_all_gather(x, axis_name: str):
     """x [s, ...] local shard -> [n*s, ...] via n-1 ppermute hops."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
 
@@ -49,7 +49,7 @@ def ring_reduce_scatter(x, axis_name: str):
     the partial one step around the ring, and the receiver adds its own
     contribution — after n-1 hops device i holds the fully-reduced shard i.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     s = x.shape[0] // n
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -93,7 +93,7 @@ def compressed_psum(x, axis_name: str, block: int = 256):
     # sum int8 payloads in int32 (bandwidth: 1B/el on the wire under ring RS+AG)
     qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
     ssum = jax.lax.psum(scale, axis_name)                 # cheap [nblk, 1]
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     avg_scale = ssum / n
     return _dequantize_int8(qsum, avg_scale, pad, x.shape, x.dtype)
 
@@ -115,7 +115,7 @@ def make_ef_compressor(params_like: Any, mesh: Mesh, axis: str = "data",
             new_err = corrected - local_deq
             qsum = jax.lax.psum(q.astype(jnp.int32), axis)
             ssum = jax.lax.psum(scale, axis)
-            n = jax.lax.axis_size(axis)
+            n = axis_size(axis)
             red = _dequantize_int8(qsum, ssum / n, pad, g_.shape, jnp.float32) / n
             return red.astype(g_.dtype), new_err
 

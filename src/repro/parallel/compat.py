@@ -1,0 +1,40 @@
+"""jax version compatibility for the distributed layer.
+
+The repo targets current jax (`jax.shard_map`, `check_vma`, mesh
+``axis_types``); older releases (e.g. 0.4.x, where these live under
+``jax.experimental.shard_map`` as ``check_rep`` and ``make_mesh`` has no
+``axis_types``) are supported through these two wrappers.  All repo code and
+tests go through them instead of calling jax directly.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:                      # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})
+
+
+def axis_size(axis_name):
+    """jax.lax.axis_size fallback: psum of 1 over the axis, which resolves
+    to a static int inside shard_map on old jax too."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the arg exists."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -20,7 +20,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.parallel.compat import shard_map
 
 
 def pipeline_forward(block_fn: Callable, params_stacked: Any, x, mesh: Mesh,

@@ -1,0 +1,13 @@
+"""repro.search — the single public API for all MCTS parallelizations.
+
+    from repro.search import SearchConfig, search, search_batch
+
+See DESIGN.md §3–§5 and ``repro.search.api``.
+"""
+from repro.core.stages import SearchParams  # noqa: F401  (re-export)
+from repro.search.api import (STATS_KEYS, SearchConfig,  # noqa: F401
+                              SearchResult, get_strategy, list_strategies,
+                              register_strategy, search, search_batch)
+from repro.search.domain import (Domain, SupportsPriors,  # noqa: F401
+                                 check_domain)
+from repro.search import strategies  # noqa: F401  (registers the built-ins)

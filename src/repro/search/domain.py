@@ -1,0 +1,139 @@
+"""The formal Domain contract for all search strategies (DESIGN.md §3).
+
+A *domain* is any object exposing the game/decision-process interface the
+MCTS stages consume.  The seed repo relied on duck typing; this module makes
+the contract explicit and checkable:
+
+* ``Domain`` — a ``runtime_checkable`` Protocol.  ``isinstance(obj, Domain)``
+  verifies the required attributes exist (structural check only).
+* ``SupportsPriors`` — the optional extension supplying per-action priors
+  (PUCT); strategies fall back to uniform priors when absent.
+* ``check_domain(domain)`` — an adapter check that abstract-evaluates the
+  domain's methods (via ``jax.eval_shape``, no real compute) and raises
+  ``TypeError`` listing every contract violation.
+
+Required members
+----------------
+``num_actions : int``
+    Static branching factor A (> 0).
+``root_state() -> pytree``
+    The search root's domain state.  Leaves must be fixed-shape arrays so
+    states can live in the structure-of-arrays tree (core.tree) and be
+    batched by vmap.
+``step(state, action) -> state``
+    Apply an int32 action; must preserve the state pytree structure,
+    shapes and dtypes (scan/vmap requirement).
+``is_terminal(state) -> bool scalar``
+``playout(state, rng) -> float scalar``
+    Monte-Carlo evaluation of ``state``; reward convention is [0, 1].
+
+Optional members
+----------------
+``priors(state) -> [num_actions] float array``
+    Action priors for PUCT selection.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class Domain(Protocol):
+    """Structural type every search strategy accepts (see module docstring)."""
+
+    num_actions: int
+
+    def root_state(self) -> Any: ...
+
+    def step(self, state: Any, action: Any) -> Any: ...
+
+    def is_terminal(self, state: Any) -> Any: ...
+
+    def playout(self, state: Any, rng: Any) -> Any: ...
+
+
+@runtime_checkable
+class SupportsPriors(Protocol):
+    """Optional extension: domains that provide PUCT priors."""
+
+    def priors(self, state: Any) -> Any: ...
+
+
+def _describe(x) -> str:
+    return jax.tree_util.tree_structure(x).__repr__()
+
+
+def missing_members(domain: Any) -> List[str]:
+    """Required Domain members ``domain`` lacks (empty = structurally OK)."""
+    return [m for m in ("num_actions", "root_state", "step",
+                        "is_terminal", "playout")
+            if not hasattr(domain, m)]
+
+
+def check_domain(domain: Any) -> bool:
+    """Validate ``domain`` against the Domain contract; raise TypeError on
+    violations.  Uses abstract evaluation only — safe for expensive domains.
+    """
+    problems: List[str] = []
+    if not isinstance(domain, Domain):
+        raise TypeError(f"{type(domain).__name__} is not a Domain: "
+                        f"missing {missing_members(domain)}")
+
+    a = domain.num_actions
+    if not isinstance(a, int) or a <= 0:
+        problems.append(f"num_actions must be a positive int, got {a!r}")
+
+    try:
+        s0 = jax.eval_shape(domain.root_state)
+        s0_shapes = s0
+    except Exception as e:  # noqa: BLE001 — collect into the report
+        raise TypeError(f"root_state() failed abstract eval: {e}") from e
+
+    def same_struct(x, y):
+        return (jax.tree_util.tree_structure(x) == jax.tree_util.tree_structure(y)
+                and all(ax.shape == ay.shape and ax.dtype == ay.dtype
+                        for ax, ay in zip(jax.tree_util.tree_leaves(x),
+                                          jax.tree_util.tree_leaves(y))))
+
+    try:
+        s1 = jax.eval_shape(lambda s: domain.step(s, jnp.int32(0)), s0)
+        if not same_struct(s1, s0_shapes):
+            problems.append(
+                "step() must preserve the state pytree "
+                f"(got {_describe(s1)}, want {_describe(s0_shapes)})")
+    except Exception as e:  # noqa: BLE001
+        problems.append(f"step() failed abstract eval: {e}")
+
+    try:
+        t = jax.eval_shape(domain.is_terminal, s0)
+        if jnp.shape(t) != () or t.dtype != jnp.bool_:
+            problems.append(
+                f"is_terminal() must return a bool scalar, got "
+                f"shape={jnp.shape(t)} dtype={t.dtype}")
+    except Exception as e:  # noqa: BLE001
+        problems.append(f"is_terminal() failed abstract eval: {e}")
+
+    try:
+        v = jax.eval_shape(domain.playout, s0, jax.random.key(0))
+        if jnp.shape(v) != ():
+            problems.append(
+                f"playout() must return a scalar, got shape={jnp.shape(v)}")
+    except Exception as e:  # noqa: BLE001
+        problems.append(f"playout() failed abstract eval: {e}")
+
+    if isinstance(domain, SupportsPriors):
+        try:
+            p = jax.eval_shape(domain.priors, s0)
+            if jnp.shape(p) != (a,):
+                problems.append(
+                    f"priors() must return shape ({a},), got {jnp.shape(p)}")
+        except Exception as e:  # noqa: BLE001
+            problems.append(f"priors() failed abstract eval: {e}")
+
+    if problems:
+        raise TypeError(f"{type(domain).__name__} violates the Domain "
+                        "contract:\n  - " + "\n  - ".join(problems))
+    return True

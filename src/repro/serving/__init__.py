@@ -1,1 +1,4 @@
 from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F401
+from repro.serving.mcts_decode import (MCTSDecodeConfig,  # noqa: F401
+                                       make_batched_searcher, mcts_decode,
+                                       mcts_decode_batch)

@@ -6,6 +6,15 @@ empty slots are refilled by prefilling queued requests into the batch
 position (per-slot KV cache rows + per-slot positions), so decode steps
 always run at full batch — the serving-side analogue of keeping the paper's
 pipeline stages busy.
+
+Two per-slot decode modes (EngineConfig.decode):
+
+* ``"greedy"`` — KV-cached argmax decoding (the seed behaviour).
+* ``"mcts"``   — every engine step runs ONE batched multi-root search
+  (repro.search.search_batch via make_batched_searcher) over all live
+  slots' prefixes and commits each slot's chosen token: the paper's search
+  as a serving feature, one device program per emitted token across the
+  whole batch (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.base import ModelConfig, get_family
+from repro.serving.mcts_decode import MCTSDecodeConfig, make_batched_searcher
 
 
 @dataclasses.dataclass
@@ -37,6 +47,8 @@ class EngineConfig:
     max_batch: int = 4
     max_seq: int = 256
     eos_token: int = -1                # -1: never stops early
+    decode: str = "greedy"             # "greedy" | "mcts"
+    mcts: Optional[MCTSDecodeConfig] = None   # knobs for decode="mcts"
 
 
 class ServingEngine:
@@ -48,7 +60,9 @@ class ServingEngine:
         self.ecfg = engine_cfg
         self.fam = get_family(cfg)
         b, s = engine_cfg.max_batch, engine_cfg.max_seq
-        self.cache = self.fam.init_cache(cfg, b, s)
+        # KV cache only backs the greedy path; mcts mode re-reads prefixes
+        self.cache = (self.fam.init_cache(cfg, b, s)
+                      if engine_cfg.decode == "greedy" else None)
         self.slots: List[Optional[Request]] = [None] * b
         self.remaining = np.zeros(b, np.int32)
         self.queue: "queue.Queue[Request]" = queue.Queue()
@@ -56,9 +70,25 @@ class ServingEngine:
             lambda p, c, t: self.fam.decode_step(cfg, p, c, t))
         self._prefill_one = jax.jit(
             lambda p, t, c: self.fam.prefill(cfg, p, t, c))
+        self.mode = engine_cfg.decode
+        if self.mode == "mcts":
+            self.mcfg = engine_cfg.mcts or MCTSDecodeConfig()
+            # per-slot padded prefix buffers; true lengths ride separately so
+            # the batched searcher keeps one static shape for all steps
+            self.prefix_buf = np.zeros((b, s), np.int32)
+            self.prefix_len = np.zeros((b,), np.int32)
+            self._rng = jax.random.key(0)
+            self._mcts_search = make_batched_searcher(
+                cfg, params, self.mcfg, batch=b)
+        elif self.mode != "greedy":
+            raise ValueError(f"unknown decode mode {engine_cfg.decode!r}")
 
     # -- request intake ----------------------------------------------------
     def submit(self, req: Request):
+        if len(req.prompt) > self.ecfg.max_seq:
+            raise ValueError(
+                f"prompt of request {req.uid} has {len(req.prompt)} tokens, "
+                f"exceeding max_seq={self.ecfg.max_seq}")
         req.enqueue_t = time.time()
         self.queue.put(req)
 
@@ -71,15 +101,36 @@ class ServingEngine:
                 req = self.queue.get_nowait()
             except queue.Empty:
                 return
-            # prefill this request alone, then splice its cache row into slot i
+            if req.max_new_tokens <= 0:
+                req.done = True
+                req.finish_t = time.time()
+                self.slots[i] = req
+                self.remaining[i] = 0
+                continue
             plen = len(req.prompt)
+            if self.mode == "mcts":
+                # no KV prefill: the searcher re-reads the prefix buffer; the
+                # first token comes from the first search step
+                self.slots[i] = req
+                self.remaining[i] = req.max_new_tokens
+                self.prefix_buf[i] = 0
+                self.prefix_buf[i, :plen] = np.asarray(req.prompt, np.int32)
+                self.prefix_len[i] = plen
+                continue
+            # prefill this request alone, then splice its cache row into slot i
             one_cache = self.fam.init_cache(self.cfg, 1, self.ecfg.max_seq)
             logits, one_cache = self._prefill_one(
                 self.params, jnp.asarray(req.prompt, jnp.int32)[None], one_cache)
             tok = int(jnp.argmax(logits[0, -1]))
             req.out_tokens.append(tok)
             self.slots[i] = req
-            self.remaining[i] = req.max_new_tokens - 1
+            # each decode step writes one KV entry at position plen, plen+1,
+            # ... — clamp so the slot finishes before scattering past max_seq
+            self.remaining[i] = min(req.max_new_tokens - 1,
+                                    self.ecfg.max_seq - plen)
+            if self.remaining[i] <= 0 or tok == self.ecfg.eos_token:
+                req.done = True
+                req.finish_t = time.time()
             self.cache = jax.tree_util.tree_map(
                 lambda full, one: full.at[_batch_axis_index(full, i)].set(one[_one_index(one)]),
                 self.cache, one_cache)
@@ -98,6 +149,8 @@ class ServingEngine:
         live = [i for i, s in enumerate(self.slots) if s is not None and not s.done]
         if not live:
             return 0
+        if self.mode == "mcts":
+            return self._mcts_step(live)
         logits, self.cache = self._decode(self.params, self.cache,
                                           self._next_tokens())
         toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
@@ -109,6 +162,32 @@ class ServingEngine:
             self.remaining[i] -= 1
             emitted += 1
             if self.remaining[i] <= 0 or tok == self.ecfg.eos_token:
+                req.done = True
+                req.finish_t = time.time()
+        return emitted
+
+    def _mcts_step(self, live: List[int]) -> int:
+        """One batched multi-root search over every slot; commit one token
+        per live slot.  Dead slots are searched too (the program is one fixed
+        [B]-batch) and their outputs ignored."""
+        self._rng, sub = jax.random.split(self._rng)
+        toks = np.asarray(self._mcts_search(
+            jnp.asarray(self.prefix_buf), jnp.asarray(self.prefix_len), sub))
+        emitted = 0
+        for i in live:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.out_tokens.append(tok)
+            at_capacity = self.prefix_len[i] >= self.ecfg.max_seq
+            if not at_capacity:
+                self.prefix_buf[i, self.prefix_len[i]] = tok
+                self.prefix_len[i] += 1
+            self.remaining[i] -= 1
+            emitted += 1
+            # finish at the sequence capacity too — further searches would
+            # keep emitting from the same frozen prefix
+            if (self.remaining[i] <= 0 or tok == self.ecfg.eos_token
+                    or at_capacity):
                 req.done = True
                 req.finish_t = time.time()
         return emitted

@@ -1,30 +1,40 @@
-"""Pipeline-MCTS-guided decoding — the paper's technique as a serving feature.
+"""MCTS-guided decoding on the unified ``repro.search`` API.
 
-For each emitted token, a pipelined MCTS (repro.core.pipeline) searches the
-top-A continuations: Select/Expand/Backup walk the token tree while the
-Playout stage evaluates LM rollouts in ``lanes`` parallel lanes (the
-nonlinear pipeline's replicated playout stages — on TPU, a batched/sharded
-forward).  The chosen root action's token is committed and the search
-restarts from the extended prefix.
+For each emitted token, a search (any registered strategy — default the
+paper's pipeline) explores the top-A continuations: Select/Expand/Backup
+walk the token tree while the Playout stage evaluates LM rollouts in
+``lanes`` parallel lanes.  The chosen root action's token is committed and
+the search restarts from the extended prefix.
+
+Two granularities:
+
+* ``mcts_decode``        — one request, one search per token (reference).
+* ``mcts_decode_batch``  — B requests; every decode step is ONE device
+  program that runs B independent searches via ``search_batch`` (batched
+  multi-root search).  Requests share a padded token buffer; true prefix
+  lengths ride along as ``LMDecodeDomain.prompt_len``, so the jitted step
+  compiles once and is reused for every token of every request.
+
+``make_batched_searcher`` is the factory behind both ``mcts_decode_batch``
+and ``ServingEngine``'s MCTS-decode slots (DESIGN.md §5).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List
+from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.domains.lm_decode import LMDecodeDomain
-from repro.core.pipeline import PipelineConfig, run_pipeline
-from repro.core.stages import SearchParams
-from repro.core.tree import root_action_by_visits
 from repro.models.base import ModelConfig
+from repro.search import SearchConfig, SearchParams, search_batch
 
 
 @dataclasses.dataclass(frozen=True)
 class MCTSDecodeConfig:
+    method: str = "pipeline"   # any registered strategy
     num_actions: int = 4
     budget: int = 32           # playouts per emitted token
     lanes: int = 4             # parallel playout stages
@@ -33,34 +43,83 @@ class MCTSDecodeConfig:
     cp: float = 1.0
     temperature: float = 1.0
 
+    def search_config(self) -> SearchConfig:
+        return SearchConfig(
+            method=self.method, budget=self.budget, lanes=self.lanes,
+            keep_tree=False,
+            params=SearchParams(cp=self.cp, max_depth=self.search_depth,
+                                puct=True))
+
+
+def _domain(cfg: ModelConfig, params, prompt, dcfg: MCTSDecodeConfig,
+            prompt_len=None) -> LMDecodeDomain:
+    return LMDecodeDomain(
+        cfg=cfg, params=params, prompt=prompt,
+        num_actions=dcfg.num_actions, search_depth=dcfg.search_depth,
+        rollout_len=dcfg.rollout_len, temperature=dcfg.temperature,
+        prompt_len=prompt_len)
+
 
 def mcts_decode(cfg: ModelConfig, params, prompt: np.ndarray,
                 n_tokens: int, dcfg: MCTSDecodeConfig, seed: int = 0
                 ) -> List[int]:
-    """Emit ``n_tokens`` tokens, each chosen by a pipelined MCTS search."""
-    out: List[int] = []
-    prefix = jnp.asarray(prompt, jnp.int32)
+    """Emit ``n_tokens`` tokens, each chosen by one search per token.
+
+    Delegates to the B=1 batched path: the padded buffer + ``prompt_len``
+    keep the searched shapes static, so the whole decode compiles once
+    instead of re-jitting as the prefix grows.
+    """
+    prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+    return mcts_decode_batch(cfg, params, prompt, n_tokens, dcfg, seed)[0]
+
+
+def make_batched_searcher(cfg: ModelConfig, params, dcfg: MCTSDecodeConfig,
+                          batch: int) -> Callable:
+    """Jitted ``(token_buf [B, buf_len] i32, lens [B] i32, rng) -> [B] i32``:
+    one device program that searches all B prefixes and returns each slot's
+    chosen next token.  Shapes are static, so one compilation serves every
+    decode step."""
+    scfg = dcfg.search_config()
+
+    def root_topk(buf_row, len_row):
+        d = _domain(cfg, params, buf_row, dcfg, prompt_len=len_row)
+        _, top = d._topk(d.root_state())
+        return top
+
+    def step(buf, lens, rng):
+        domains = [_domain(cfg, params, buf[i], dcfg, prompt_len=lens[i])
+                   for i in range(batch)]
+        res = search_batch(domains, scfg, rng)
+        tops = jax.vmap(root_topk)(buf, lens)              # [B, A], one pass
+        return tops[jnp.arange(batch), res.best_action].astype(jnp.int32)
+
+    return jax.jit(step)
+
+
+def mcts_decode_batch(cfg: ModelConfig, params, prompts: np.ndarray,
+                      n_tokens: int, dcfg: MCTSDecodeConfig, seed: int = 0
+                      ) -> List[List[int]]:
+    """Decode B prompts together: each of the ``n_tokens`` steps is a single
+    batched multi-root search over all requests.
+
+    ``prompts`` is [B, plen] int32 (equal lengths; pad upstream if needed —
+    per-request true lengths are supported via the engine path).
+    """
+    prompts = np.asarray(prompts, np.int32)
+    if prompts.ndim != 2:
+        raise ValueError(f"prompts must be [B, plen], got {prompts.shape}")
+    b, plen = prompts.shape
+    buf = np.zeros((b, plen + n_tokens), np.int32)
+    buf[:, :plen] = prompts
+    lens = np.full((b,), plen, np.int32)
+    searcher = make_batched_searcher(cfg, params, dcfg, batch=b)
     rng = jax.random.key(seed)
-
-    sp = SearchParams(cp=dcfg.cp, max_depth=dcfg.search_depth, puct=True)
-    pcfg = PipelineConfig(budget=dcfg.budget, lanes=dcfg.lanes, params=sp)
-
-    @jax.jit
-    def search(prefix, rng):
-        domain = LMDecodeDomain(
-            cfg=cfg, params=params, prompt=prefix,
-            num_actions=dcfg.num_actions, search_depth=dcfg.search_depth,
-            rollout_len=dcfg.rollout_len, temperature=dcfg.temperature)
-        tree, stats = run_pipeline(domain, pcfg, rng)
-        action = root_action_by_visits(tree)
-        root_state = domain.root_state()
-        _, top_toks = domain._topk(root_state)
-        return top_toks[action], stats["duplicates"]
-
+    out: List[List[int]] = [[] for _ in range(b)]
     for _ in range(n_tokens):
         rng, sub = jax.random.split(rng)
-        tok, _ = search(prefix, sub)
-        tok = int(tok)
-        out.append(tok)
-        prefix = jnp.concatenate([prefix, jnp.asarray([tok], jnp.int32)])
+        toks = np.asarray(searcher(jnp.asarray(buf), jnp.asarray(lens), sub))
+        for i in range(b):
+            out[i].append(int(toks[i]))
+            buf[i, lens[i]] = toks[i]
+        lens += 1
     return out

@@ -1,0 +1,28 @@
+"""The tools/api_surface.py checker: current tree is clean; a smuggled
+run_* entry point outside repro/search is caught."""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import api_surface  # noqa: E402
+
+
+def test_current_tree_is_clean():
+    assert api_surface.check(REPO / "src") == []
+
+
+def test_detects_new_entry_point(tmp_path):
+    mod = tmp_path / "repro" / "core" / "rogue.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("def run_rogue_search(domain):\n    pass\n")
+    assert api_surface.check(tmp_path) == [("repro/core/rogue.py",
+                                            "run_rogue_search")]
+
+
+def test_search_package_is_exempt(tmp_path):
+    mod = tmp_path / "repro" / "search" / "extra.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("def run_new_strategy(domain):\n    pass\n")
+    assert api_surface.check(tmp_path) == []

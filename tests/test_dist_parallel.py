@@ -19,9 +19,10 @@ def _run(code: str):
 def test_dist_decode_attention_exact():
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.parallel.compat import make_mesh
         from repro.parallel.dist_attention import dist_decode_attention
         from repro.kernels.decode_attention import ops as da
-        mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         ks = jax.random.split(jax.random.key(0), 4)
         B, S, H, Hkv, D = 2, 256, 4, 2, 32
         q = jax.random.normal(ks[0], (B, 1, H, D))
@@ -40,10 +41,11 @@ def test_dist_decode_attention_exact():
 def test_ep_dispatch_matches_spmd_moe():
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.parallel.compat import make_mesh
         from repro.parallel.ep_dispatch import ep_moe_ffn
         from repro.models.base import ModelConfig
         from repro.models import moe as M
-        mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
                           n_heads=4, d_ff=0, vocab_size=64, dtype="float32",
                           n_experts=8, moe_topk=2, d_ff_expert=16,
@@ -64,11 +66,11 @@ def test_ep_dispatch_differentiable():
     """EP dispatch gradients flow (it runs inside the scanned train step)."""
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.parallel.compat import make_mesh
         from repro.parallel.ep_dispatch import ep_moe_ffn
         from repro.models.base import ModelConfig
         from repro.models import moe as M
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
                           n_heads=4, d_ff=0, vocab_size=64, dtype="float32",
                           n_experts=8, moe_topk=2, d_ff_expert=16)

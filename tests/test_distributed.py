@@ -21,10 +21,11 @@ def _run(code: str):
 def test_ring_collectives():
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.parallel.compat import make_mesh
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.parallel.compat import shard_map
         from repro.parallel.collectives import ring_all_gather, ring_reduce_scatter
-        mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         x = jnp.arange(32.0).reshape(32, 1)
         ag = jax.jit(lambda v: shard_map(lambda u: ring_all_gather(u, "data"),
             mesh=mesh, in_specs=P("data"), out_specs=P(None, None), check_vma=False)(v))(x)
@@ -40,10 +41,11 @@ def test_ring_collectives():
 def test_compressed_psum_and_ef():
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.parallel.compat import make_mesh
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.parallel.compat import shard_map
         from repro.parallel.collectives import compressed_psum, make_ef_compressor
-        mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("data",))
         y = jax.random.normal(jax.random.key(0), (1024,))
         ps = jax.jit(lambda v: shard_map(lambda u: compressed_psum(u, "data"),
             mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)(v))(y)
@@ -63,8 +65,9 @@ def test_compressed_psum_and_ef():
 def test_pipeline_parallel_matches_sequential():
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.parallel.compat import make_mesh
         from repro.parallel.pipeline import pipeline_forward
-        mesh = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("stage",))
         L, B, D = 8, 8, 16
         Ws = jax.random.normal(jax.random.key(2), (L, D, D)) * 0.2
         x = jax.random.normal(jax.random.key(3), (B, D))
@@ -82,6 +85,7 @@ def test_sharded_train_step_runs():
     """Real sharded execution (not just lowering) of a smoke train step."""
     out = _run("""
         import jax, jax.numpy as jnp
+        from repro.parallel.compat import make_mesh
         from repro.configs import get_smoke_config
         from repro.models.base import get_family, abstract_params
         from repro.launch.steps import make_train_step
@@ -92,8 +96,7 @@ def test_sharded_train_step_runs():
         import numpy as np
         cfg = get_smoke_config("qwen2-0.5b").replace(dtype="float32")
         fam = get_family(cfg)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         params = fam.init(cfg, jax.random.key(0))
         pshard = make_shardings(fam.param_axes(cfg), params, mesh)
         params = jax.device_put(params, pshard)

@@ -1,5 +1,6 @@
 """MCTS core behaviour: paper schedule arithmetic, tree invariants,
-pipeline vs sequential strength, baselines, domains."""
+pipeline vs sequential strength, baselines, domains — all search runs go
+through the unified ``repro.search`` API."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,16 +9,16 @@ import pytest
 from repro.core import schedule
 from repro.core.domains.pgame import (PGameDomain, enumerate_root_values,
                                       optimal_root_action)
-from repro.core.leaf_parallel import run_leaf_parallel
-from repro.core.pipeline import PipelineConfig, run_pipeline
-from repro.core.root_parallel import root_parallel_action, run_root_parallel
-from repro.core.sequential import run_sequential
-from repro.core.stages import SearchParams
-from repro.core.tree import check_consistency, root_action_by_visits
-from repro.core.tree_parallel import run_tree_parallel
+from repro.core.tree import check_consistency
+from repro.search import SearchConfig, SearchParams, search
 
 DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
 SP = SearchParams(cp=0.7, max_depth=6)
+
+
+def _search(method, budget, lanes=1, seed=0):
+    cfg = SearchConfig(method=method, budget=budget, lanes=lanes, params=SP)
+    return jax.jit(lambda r: search(DOM, cfg, r))(jax.random.key(seed))
 
 
 # ---------------------------------------------------------------------------
@@ -61,43 +62,45 @@ def _consistent(tree):
 
 
 def test_sequential_invariants_and_strength():
-    tree, _ = jax.jit(lambda r: run_sequential(DOM, SP, 256, r))(jax.random.key(0))
-    _consistent(tree)
-    assert int(tree["visits"][0]) == 256
-    assert int(root_action_by_visits(tree)) == optimal_root_action(DOM)
+    # budget 512: the top-2 oracle values are within 0.02, and at 256 the
+    # recommendation still flips on some seeds (the seed repo's version of
+    # this assertion was flaky for exactly that reason)
+    res = _search("sequential", 512)
+    _consistent(res.tree)
+    assert int(res.tree["visits"][0]) == 512
+    assert int(res.best_action) == optimal_root_action(DOM)
 
 
 def test_pipeline_invariants():
-    cfg = PipelineConfig(budget=128, lanes=4, params=SP)
-    tree, stats = jax.jit(lambda r: run_pipeline(DOM, cfg, r))(jax.random.key(0))
-    _consistent(tree)
-    assert int(stats["playouts"]) == 128
-    assert float(stats["mean_occupancy"]) > 0.8   # pipeline keeps stages busy
+    res = _search("pipeline", 128, lanes=4)
+    _consistent(res.tree)
+    assert int(res.stats["playouts"]) == 128
+    assert float(res.extras["mean_occupancy"]) > 0.8   # pipeline keeps stages busy
 
 
 def test_pipeline_linear_lanes1():
-    cfg = PipelineConfig(budget=64, lanes=1, params=SP)
-    tree, stats = jax.jit(lambda r: run_pipeline(DOM, cfg, r))(jax.random.key(1))
-    _consistent(tree)
-    assert int(stats["playouts"]) == 64
+    res = _search("pipeline", 64, lanes=1, seed=1)
+    _consistent(res.tree)
+    assert int(res.stats["playouts"]) == 64
 
 
 def test_tree_parallel_invariants():
-    tree, stats = jax.jit(lambda r: run_tree_parallel(DOM, SP, 128, 8, r))(jax.random.key(0))
-    _consistent(tree)
-    assert int(stats["playouts"]) == 128
+    res = _search("tree", 128, lanes=8)
+    _consistent(res.tree)
+    assert int(res.stats["playouts"]) == 128
 
 
 def test_leaf_parallel_runs():
-    tree, stats = jax.jit(lambda r: run_leaf_parallel(DOM, SP, 128, 4, r))(jax.random.key(0))
-    assert int(stats["playouts"]) == 128
-    assert int(tree["visits"][0]) == 128          # aggregated backups
+    res = _search("leaf", 128, lanes=4)
+    assert int(res.stats["playouts"]) == 128
+    assert int(res.tree["visits"][0]) == 128          # aggregated backups
 
 
 def test_root_parallel_combines():
-    combined, stats = jax.jit(lambda r: run_root_parallel(DOM, SP, 128, 4, r))(jax.random.key(0))
-    assert int(combined["action_visits"].sum()) >= 124   # 4 workers x 32 - roots
-    assert 0 <= int(root_parallel_action(combined)) < DOM.num_actions
+    res = _search("root", 128, lanes=4)
+    assert res.tree is None                            # no single shared tree
+    assert int(res.action_visits.sum()) >= 124   # 4 workers x 32 - roots
+    assert 0 <= int(res.best_action) < DOM.num_actions
 
 
 # ---------------------------------------------------------------------------
@@ -109,10 +112,9 @@ def test_pipeline_duplicates_bounded_vs_tree_parallel():
     budget = 256
     dup_pipe, dup_tp = [], []
     for s in range(3):
-        cfg = PipelineConfig(budget=budget, lanes=lanes, params=SP)
-        _, st = jax.jit(lambda r: run_pipeline(DOM, cfg, r))(jax.random.key(s))
+        st = _search("pipeline", budget, lanes=lanes, seed=s).stats
         dup_pipe.append(int(st["duplicates"]))
-        _, st2 = jax.jit(lambda r: run_tree_parallel(DOM, SP, budget, 4 * lanes, r))(jax.random.key(s))
+        st2 = _search("tree", budget, lanes=4 * lanes, seed=s).stats
         dup_tp.append(int(st2["duplicates"]))
     assert np.mean(dup_pipe) <= np.mean(dup_tp), (dup_pipe, dup_tp)
 
@@ -120,17 +122,19 @@ def test_pipeline_duplicates_bounded_vs_tree_parallel():
 def test_pipeline_strength_tracks_sequential():
     """At equal budget, pipeline's recommended action matches the optimum
     about as often as sequential (strength-scalability, def. 2)."""
-    budget, seeds = 192, 6
+    # budget 384: this domain's top-2 actions are near-tied, and below ~384
+    # playouts both searches still flip on several seeds (the seed repo's
+    # budget of 192 made this latently flaky)
+    budget, seeds = 384, 6
     opt = optimal_root_action(DOM)
     seq_hits = pipe_hits = 0
-    cfg = PipelineConfig(budget=budget, lanes=4, params=SP)
-    seq_j = jax.jit(lambda r: run_sequential(DOM, SP, budget, r))
-    pipe_j = jax.jit(lambda r: run_pipeline(DOM, cfg, r))
+    seq_cfg = SearchConfig(method="sequential", budget=budget, params=SP)
+    pipe_cfg = SearchConfig(method="pipeline", budget=budget, lanes=4, params=SP)
+    seq_j = jax.jit(lambda r: search(DOM, seq_cfg, r).best_action)
+    pipe_j = jax.jit(lambda r: search(DOM, pipe_cfg, r).best_action)
     for s in range(seeds):
-        t1, _ = seq_j(jax.random.key(s))
-        t2, _ = pipe_j(jax.random.key(s))
-        seq_hits += int(root_action_by_visits(t1)) == opt
-        pipe_hits += int(root_action_by_visits(t2)) == opt
+        seq_hits += int(seq_j(jax.random.key(s))) == opt
+        pipe_hits += int(pipe_j(jax.random.key(s))) == opt
     assert pipe_hits >= seq_hits - 2   # within noise at these budgets
 
 
@@ -169,3 +173,24 @@ def test_lm_decode_domain():
     assert 0.0 < float(v) <= 1.0
     pri = dom.priors(st2)
     np.testing.assert_allclose(float(pri.sum()), 1.0, atol=1e-5)
+
+
+def test_lm_decode_domain_padded_prompt_len():
+    """A padded buffer + explicit prompt_len must match the exact-length
+    domain's terminal horizon (the batched-serving contract)."""
+    from repro.core.domains.lm_decode import LMDecodeDomain
+    from repro.models.base import ModelConfig, get_family
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", ce_chunk=8, remat=False)
+    fam = get_family(cfg)
+    params = fam.init(cfg, jax.random.key(0))
+    buf = jnp.zeros((8,), jnp.int32).at[:3].set(jnp.array([1, 2, 3]))
+    dom = LMDecodeDomain(cfg=cfg, params=params, prompt=buf, num_actions=3,
+                         search_depth=2, rollout_len=1,
+                         prompt_len=jnp.int32(3))
+    st = dom.root_state()
+    assert int(st["len"]) == 3
+    assert not bool(dom.is_terminal(st))
+    st = dom.step(dom.step(st, jnp.int32(0)), jnp.int32(1))
+    assert bool(dom.is_terminal(st))

@@ -1,0 +1,103 @@
+"""Serving on the unified search API: batched MCTS decode and the engine's
+decode="mcts" mode (one batched multi-root search per emitted token)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models.base import ModelConfig, get_family
+from repro.serving import (EngineConfig, MCTSDecodeConfig, Request,
+                           ServingEngine, mcts_decode, mcts_decode_batch)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  dtype="float32", ce_chunk=8, remat=False)
+DCFG = MCTSDecodeConfig(num_actions=3, budget=6, lanes=2, search_depth=2,
+                        rollout_len=1)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_family(CFG).init(CFG, jax.random.key(0))
+
+
+def test_mcts_decode_emits_tokens(params):
+    toks = mcts_decode(CFG, params, np.array([1, 2, 3], np.int32), 2, DCFG)
+    assert len(toks) == 2
+    assert all(0 <= t < CFG.vocab_size for t in toks)
+
+
+def test_mcts_decode_batch_shapes(params):
+    prompts = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
+    out = mcts_decode_batch(CFG, params, prompts, 2, DCFG)
+    assert len(out) == 2 and all(len(o) == 2 for o in out)
+    assert all(0 <= t < CFG.vocab_size for o in out for t in o)
+
+
+def test_mcts_decode_batch_rejects_flat_prompts(params):
+    with pytest.raises(ValueError, match="B, plen"):
+        mcts_decode_batch(CFG, params, np.array([1, 2, 3], np.int32), 1, DCFG)
+
+
+def test_engine_mcts_mode_drains_mixed_lengths(params):
+    eng = ServingEngine(CFG, params, EngineConfig(
+        max_batch=2, max_seq=16, decode="mcts", mcts=DCFG))
+    eng.submit(Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                       max_new_tokens=2))
+    eng.submit(Request(uid=1, prompt=np.array([4, 5], np.int32),
+                       max_new_tokens=3))
+    res = eng.run_until_drained()
+    assert res["tokens"] == 5
+    assert len(eng.slots[0].out_tokens) == 2
+    assert len(eng.slots[1].out_tokens) == 3
+    assert all(s.done for s in eng.slots)
+
+
+def test_engine_rejects_unknown_decode_mode(params):
+    with pytest.raises(ValueError, match="decode mode"):
+        ServingEngine(CFG, params, EngineConfig(max_batch=1, decode="beam"))
+
+
+def test_engine_rejects_oversized_prompt(params):
+    eng = ServingEngine(CFG, params, EngineConfig(
+        max_batch=1, max_seq=8, decode="mcts", mcts=DCFG))
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(uid=0, prompt=np.arange(9, dtype=np.int32) % 60,
+                           max_new_tokens=1))
+
+
+def test_engine_zero_max_new_tokens_finishes_without_emitting(params):
+    for mode in ("greedy", "mcts"):
+        eng = ServingEngine(CFG, params, EngineConfig(
+            max_batch=1, max_seq=16, decode=mode, mcts=DCFG))
+        eng.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                           max_new_tokens=0))
+        eng.run_until_drained()
+        assert eng.slots[0].done
+        assert eng.slots[0].out_tokens == []
+
+
+def test_engine_greedy_clamps_decode_at_kv_capacity(params):
+    """Greedy slots stop before decode steps would scatter KV entries past
+    max_seq (prompt fills the cache -> only the prefill token is emitted)."""
+    eng = ServingEngine(CFG, params, EngineConfig(max_batch=1, max_seq=8))
+    eng.submit(Request(uid=0, prompt=np.arange(8, dtype=np.int32) % 60 + 1,
+                       max_new_tokens=4))
+    eng.run_until_drained()
+    req = eng.slots[0]
+    assert req.done
+    assert len(req.out_tokens) == 1
+
+
+def test_engine_mcts_finishes_at_sequence_capacity(params):
+    """A request whose decode would overrun max_seq is finished at capacity
+    instead of emitting from a frozen prefix forever."""
+    eng = ServingEngine(CFG, params, EngineConfig(
+        max_batch=1, max_seq=6, decode="mcts", mcts=DCFG))
+    eng.submit(Request(uid=0, prompt=np.array([1, 2, 3, 4], np.int32),
+                       max_new_tokens=10))
+    eng.run_until_drained()
+    req = eng.slots[0]
+    assert req.done
+    # 2 tokens extend the prefix to max_seq, a 3rd is emitted from the full
+    # prefix and the request is closed there
+    assert len(req.out_tokens) == 3

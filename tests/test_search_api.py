@@ -1,0 +1,214 @@
+"""The unified ``repro.search`` API: cross-strategy parity at equal budget,
+batched multi-root search, the Domain protocol, the registry, and the
+deprecated ``core.run_*`` shims."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.domains.pgame import PGameDomain, optimal_root_action
+from repro.search import (STATS_KEYS, Domain, SearchConfig, SearchParams,
+                          SearchResult, check_domain, list_strategies,
+                          register_strategy, search, search_batch)
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
+SP = SearchParams(cp=0.7, max_depth=6)
+METHODS = ("sequential", "root", "leaf", "tree", "pipeline")
+
+
+def _run(method, budget=64, lanes=4, seed=0, **kw):
+    cfg = SearchConfig(method=method, budget=budget, lanes=lanes, params=SP, **kw)
+    return jax.jit(lambda r: search(DOM, cfg, r))(jax.random.key(seed))
+
+
+# ---------------------------------------------------------------------------
+# cross-strategy equal-budget parity
+# ---------------------------------------------------------------------------
+def test_all_methods_registered():
+    assert set(METHODS) <= set(list_strategies())
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_strategy_runs_under_jit_with_common_schema(method):
+    res = _run(method)
+    assert isinstance(res, SearchResult)
+    assert set(res.stats) == set(STATS_KEYS)
+    assert res.action_visits.shape == (DOM.num_actions,)
+    assert res.action_value.shape == (DOM.num_actions,)
+    assert 0 <= int(res.best_action) < DOM.num_actions
+    # equal-budget invariant: every strategy performs >= the requested budget
+    assert int(res.stats["playouts_completed"]) >= 64
+    assert int(res.stats["playouts_completed"]) == int(res.stats["playouts"])
+    assert int(res.stats["playouts_requested"]) == int(res.stats["playouts_completed"])
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_visits_conservation_at_root(method):
+    """Root child visits account for every completed playout (minus those
+    that terminated at the root before expanding a child)."""
+    res = _run(method, budget=128)
+    completed = int(res.stats["playouts_completed"])
+    child_sum = int(res.action_visits.sum())
+    assert child_sum <= completed
+    assert child_sum >= completed - 8          # only the first expansions miss
+    if res.tree is not None:
+        assert int(res.tree["visits"][0]) == completed
+        assert bool((res.tree["vloss"] == 0).all())
+
+
+def test_sequential_pipeline_agree_at_lanes1():
+    """lanes=1 pipeline is the linear pipeline — same trajectory structure as
+    sequential, so at a converged budget both recommend the optimum."""
+    opt = optimal_root_action(DOM)
+    seq = _run("sequential", budget=512, lanes=1)
+    pipe = _run("pipeline", budget=512, lanes=1)
+    assert int(seq.best_action) == int(pipe.best_action) == opt
+
+
+# ---------------------------------------------------------------------------
+# batched multi-root search
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ("sequential", "pipeline"))
+def test_search_batch_matches_individual_calls(method):
+    cfg = SearchConfig(method=method, budget=64, lanes=4, params=SP)
+    rng = jax.random.key(42)
+    bres = search_batch([DOM] * 4, cfg, rng)
+    keys = jax.random.split(rng, 4)
+    assert bres.action_visits.shape == (4, DOM.num_actions)
+    for i in range(4):
+        ind = search(DOM, cfg, keys[i])
+        np.testing.assert_array_equal(np.asarray(bres.action_visits[i]),
+                                      np.asarray(ind.action_visits))
+        np.testing.assert_allclose(np.asarray(bres.action_value[i]),
+                                   np.asarray(ind.action_value), rtol=1e-5)
+        assert int(bres.best_action[i]) == int(ind.best_action)
+        for k in STATS_KEYS:
+            assert int(bres.stats[k][i]) == int(ind.stats[k])
+
+
+def test_search_batch_stacks_differing_domain_fields():
+    """The stacked-varying-fields path honors the same per-element RNG/parity
+    contract as the identical-domains fast path."""
+    doms = [PGameDomain(num_actions=4, game_depth=6, binary_reward=True,
+                        seed=3, threshold=t) for t in (0.4, 0.5, 0.6)]
+    cfg = SearchConfig(method="sequential", budget=32, params=SP,
+                       keep_tree=False)
+    rng = jax.random.key(0)
+    res = search_batch(doms, cfg, rng)
+    assert res.action_visits.shape == (3, 4)
+    keys = jax.random.split(rng, 3)
+    for i, d in enumerate(doms):
+        ind = search(d, cfg, keys[i])
+        np.testing.assert_array_equal(np.asarray(res.action_visits[i]),
+                                      np.asarray(ind.action_visits))
+        assert int(res.best_action[i]) == int(ind.best_action)
+
+
+def test_search_batch_rejects_mixed_types():
+    class Other:
+        pass
+    with pytest.raises(TypeError):
+        search_batch([DOM, Other()], SearchConfig(), jax.random.key(0))
+
+
+def test_search_batch_rejects_differing_static_ints():
+    doms = [PGameDomain(num_actions=4, game_depth=6),
+            PGameDomain(num_actions=8, game_depth=6)]
+    with pytest.raises(TypeError, match="num_actions"):
+        search_batch(doms, SearchConfig(budget=8), jax.random.key(0))
+
+
+def test_search_batch_accepts_equal_valued_distinct_instances():
+    """Separately-constructed but equal domains are one static domain, not a
+    spurious 'varying field' error."""
+    doms = [PGameDomain(num_actions=4, game_depth=4, seed=1)
+            for _ in range(3)]
+    res = search_batch(doms, SearchConfig(budget=16, keep_tree=False),
+                       jax.random.key(0))
+    assert res.action_visits.shape == (3, 4)
+
+
+# ---------------------------------------------------------------------------
+# Domain protocol + config knobs
+# ---------------------------------------------------------------------------
+def test_check_domain_passes_pgame():
+    assert check_domain(DOM)
+    assert isinstance(DOM, Domain)
+
+
+def test_check_domain_rejects_non_domain():
+    class NotADomain:
+        num_actions = 4
+    with pytest.raises(TypeError, match="missing"):
+        check_domain(NotADomain())
+
+
+def test_check_domain_reports_bad_step():
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class BadStep(PGameDomain):
+        def step(self, state, action):
+            s = super().step(state, action)
+            return {**s, "extra": jnp.float32(0.0)}   # structure change
+    with pytest.raises(TypeError, match="step"):
+        check_domain(BadStep(num_actions=4, game_depth=6))
+
+
+def test_search_rejects_non_domain():
+    with pytest.raises(TypeError, match="Domain"):
+        search(object(), SearchConfig(), jax.random.key(0))
+
+
+def test_unknown_method_lists_strategies():
+    with pytest.raises(ValueError, match="sequential"):
+        search(DOM, SearchConfig(method="nope"), jax.random.key(0))
+
+
+def test_keep_tree_false_drops_tree():
+    res = _run("sequential", keep_tree=False)
+    assert res.tree is None
+
+
+def test_register_strategy_round_trip():
+    @register_strategy("_test_echo")
+    def _echo(domain, cfg, rng):
+        return search(domain, SearchConfig(method="sequential",
+                                           budget=cfg.budget,
+                                           params=cfg.params), rng)
+    try:
+        assert "_test_echo" in list_strategies()
+        res = search(DOM, SearchConfig(method="_test_echo", budget=8,
+                                       params=SP), jax.random.key(0))
+        assert int(res.stats["playouts"]) == 8
+    finally:
+        from repro.search.api import _STRATEGIES
+        _STRATEGIES.pop("_test_echo", None)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims stay faithful for one release
+# ---------------------------------------------------------------------------
+def test_deprecated_shims_warn_and_match_new_api():
+    from repro.core.pipeline import PipelineConfig, run_pipeline
+    from repro.core.sequential import run_sequential
+    from repro.core.tree import root_action_by_visits
+
+    with pytest.warns(DeprecationWarning):
+        tree, stats = run_sequential(DOM, SP, 64, jax.random.key(0))
+    new = search(DOM, SearchConfig(method="sequential", budget=64, params=SP),
+                 jax.random.key(0))
+    assert int(stats["playouts"]) == int(new.stats["playouts"])
+    assert int(root_action_by_visits(tree)) == int(new.best_action)
+
+    with pytest.warns(DeprecationWarning):
+        tree, stats = run_pipeline(
+            DOM, PipelineConfig(budget=64, lanes=4, params=SP), jax.random.key(0))
+    new = search(DOM, SearchConfig(method="pipeline", budget=64, lanes=4,
+                                   params=SP), jax.random.key(0))
+    assert int(stats["playouts"]) == int(new.stats["playouts"])
+    assert int(stats["duplicates"]) == int(new.stats["duplicates"])
+    assert set(stats) == {"playouts", "duplicates", "ticks", "mean_occupancy",
+                          "dup_per_tick"}

@@ -1,0 +1,64 @@
+"""API-surface checker: ``repro.search`` is the only place allowed to grow
+public search entry points.
+
+Fails (exit 1) if any module under ``src/repro`` *outside* ``repro/search``
+defines a new module-level public ``run_*`` function.  The legacy deprecated
+shims (and the non-search ``run_*`` helpers that predate this policy) are
+pinned in ``ALLOWED``; removing one is fine, adding one is not — add new
+strategies via ``repro.search.register_strategy`` instead (DESIGN.md §8).
+
+Usage:  python tools/api_surface.py [--root PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+# module path (relative to src/) -> permitted module-level run_* names
+ALLOWED = {
+    "repro/core/sequential.py": {"run_sequential"},
+    "repro/core/pipeline.py": {"run_pipeline", "run_pipeline_jit"},
+    "repro/core/root_parallel.py": {"run_root_parallel"},
+    "repro/core/leaf_parallel.py": {"run_leaf_parallel"},
+    "repro/core/tree_parallel.py": {"run_tree_parallel"},
+    # non-search helpers that happen to match the pattern
+    "repro/runtime/ft.py": {"run_with_restarts"},
+    "repro/launch/dryrun.py": {"run_cell"},
+}
+
+DEF_RE = re.compile(r"^def (run_\w+)\s*\(", re.MULTILINE)
+
+
+def check(src_root: pathlib.Path) -> list:
+    violations = []
+    for path in sorted(src_root.rglob("*.py")):
+        rel = path.relative_to(src_root).as_posix()
+        if rel.startswith("repro/search/"):
+            continue
+        found = set(DEF_RE.findall(path.read_text()))
+        extra = found - ALLOWED.get(rel, set())
+        violations.extend((rel, name) for name in sorted(extra))
+    return violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: this script's parent's parent)")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root) if args.root else \
+        pathlib.Path(__file__).resolve().parent.parent
+    violations = check(root / "src")
+    for rel, name in violations:
+        print(f"api_surface: {rel}: new public search entry point {name!r} — "
+              "register a strategy in repro.search instead", file=sys.stderr)
+    if violations:
+        return 1
+    print("api_surface: OK — repro.search is the only public search API")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
