@@ -24,31 +24,34 @@ BUDGET = 256
 SEEDS = 10
 
 
-def _strength_dup(sp, lanes):
-    cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=lanes,
+def _strength_dup(sp, lanes, budget=BUDGET, seeds=SEEDS):
+    cfg = SearchConfig(method="pipeline", budget=budget, lanes=lanes,
                        params=sp, keep_tree=False)
     f = jax.jit(lambda r: search(DOM, cfg, r))
     acts, dups = [], []
-    for s in range(SEEDS):
+    for s in range(seeds):
         res = f(jax.random.key(s))
         acts.append(int(res.best_action))
         dups.append(int(res.stats["duplicates"]))
-    return strength(acts, optimal_root_action(DOM)), float(np.mean(dups)) / BUDGET
+    return strength(acts, optimal_root_action(DOM)), float(np.mean(dups)) / budget
 
 
-def run(report):
+def run(report, smoke: bool = False):
+    budget = 32 if smoke else BUDGET
+    seeds = 3 if smoke else SEEDS
     # virtual-loss weight ablation at lanes=8
-    for vlw in (0.0, 0.5, 1.0, 3.0):
+    for vlw in ((0.0, 1.0) if smoke else (0.0, 0.5, 1.0, 3.0)):
         t0 = time.perf_counter()
         st, dup = _strength_dup(SearchParams(cp=0.7, max_depth=6,
-                                             vl_weight=vlw), 8)
+                                             vl_weight=vlw), 8, budget, seeds)
         report(f"ablate_vl_weight_{vlw}", (time.perf_counter() - t0) * 1e6,
                f"strength={st:.2f} dup_rate={dup:.3f}")
 
     # in-flight concurrency (the ILD staleness dial)
-    for lanes in (1, 4, 16, 32):
+    for lanes in ((1, 16) if smoke else (1, 4, 16, 32)):
         t0 = time.perf_counter()
-        st, dup = _strength_dup(SearchParams(cp=0.7, max_depth=6), lanes)
+        st, dup = _strength_dup(SearchParams(cp=0.7, max_depth=6), lanes,
+                                budget, seeds)
         report(f"ablate_inflight_lanes{lanes}", (time.perf_counter() - t0) * 1e6,
                f"strength={st:.2f} dup_rate={dup:.3f} in_flight={4 * lanes}")
 

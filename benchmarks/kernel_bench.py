@@ -20,54 +20,58 @@ def _t(f, *a):
     return (time.perf_counter() - t0) * 1e6
 
 
-def run(report):
+def run(report, smoke: bool = False):
+    # smoke: correctness-scale shapes so the CI perf job touches every kernel
+    t_seq = 64 if smoke else 256
+    t_kv = 256 if smoke else 2048
+    n_nodes = 128 if smoke else 1024
     from repro.kernels.flash_attention import ops as fa
     ks = jax.random.split(jax.random.key(0), 3)
-    q = jax.random.normal(ks[0], (2, 256, 4, 64), jnp.float32)
-    k = jax.random.normal(ks[1], (2, 256, 2, 64), jnp.float32)
-    v = jax.random.normal(ks[2], (2, 256, 2, 64), jnp.float32)
+    q = jax.random.normal(ks[0], (2, t_seq, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, t_seq, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, t_seq, 2, 64), jnp.float32)
     us = _t(jax.jit(lambda q, k, v: fa.flash_attention(
         q, k, v, causal=True, use_ref=True)), q, k, v)
     vmem_kb = (128 * 64 + 128 * 64 * 2 + 128 * 64) * 4 / 1024
-    report("flash_attention_ref_b2s256", us,
+    report(f"flash_attention_ref_b2s{t_seq}", us,
            f"kernel_tile=128x128xD64 vmem_working_set~{vmem_kb:.0f}KB")
 
     from repro.kernels.decode_attention import ops as da
     q1 = jax.random.normal(ks[0], (4, 1, 8, 128), jnp.float32)
-    kc = jax.random.normal(ks[1], (4, 2048, 2, 128), jnp.float32)
-    vc = jax.random.normal(ks[2], (4, 2048, 2, 128), jnp.float32)
-    vl = jnp.full((4,), 2048, jnp.int32)
+    kc = jax.random.normal(ks[1], (4, t_kv, 2, 128), jnp.float32)
+    vc = jax.random.normal(ks[2], (4, t_kv, 2, 128), jnp.float32)
+    vl = jnp.full((4,), t_kv, jnp.int32)
     us = _t(jax.jit(lambda q, k, v, l: da.decode_attention(
         q, k, v, l, use_ref=True)), q1, kc, vc, vl)
-    report("decode_attention_ref_kv2048", us, "split-K blk 512, SMEM lengths")
+    report(f"decode_attention_ref_kv{t_kv}", us, "split-K blk 512, SMEM lengths")
 
     from repro.kernels.rwkv6_scan import ops as ro
-    r = jax.random.normal(ks[0], (2, 256, 4, 64)) * 0.5
-    kk = jax.random.normal(ks[1], (2, 256, 4, 64)) * 0.5
-    vv = jax.random.normal(ks[2], (2, 256, 4, 64)) * 0.5
-    w = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 256, 4, 64))) * 0.2 + 0.8
+    r = jax.random.normal(ks[0], (2, t_seq, 4, 64)) * 0.5
+    kk = jax.random.normal(ks[1], (2, t_seq, 4, 64)) * 0.5
+    vv = jax.random.normal(ks[2], (2, t_seq, 4, 64)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[0], (2, t_seq, 4, 64))) * 0.2 + 0.8
     u = jax.random.normal(ks[1], (4, 64)) * 0.3
     st = jnp.zeros((2, 4, 64, 64))
     us = _t(jax.jit(lambda *a: ro.wkv6_chunked(*a, chunk=32)[0]), r, kk, vv, w, u, st)
-    report("wkv6_chunked_t256", us, "chunk=32 matmul-form, state 64x64 VMEM")
+    report(f"wkv6_chunked_t{t_seq}", us, "chunk=32 matmul-form, state 64x64 VMEM")
 
     from repro.kernels.ssm_scan import ops as so
-    x = jax.random.normal(ks[0], (2, 256, 4, 64)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 256, 4)))
+    x = jax.random.normal(ks[0], (2, t_seq, 4, 64)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, t_seq, 4)))
     A = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
-    Bm = jax.random.normal(ks[0], (2, 256, 64)) * 0.5
-    Cm = jax.random.normal(ks[1], (2, 256, 64)) * 0.5
+    Bm = jax.random.normal(ks[0], (2, t_seq, 64)) * 0.5
+    Cm = jax.random.normal(ks[1], (2, t_seq, 64)) * 0.5
     D = jnp.ones((4,))
     st = jnp.zeros((2, 4, 64, 64))
     us = _t(jax.jit(lambda *a: so.ssd_chunked(*a, chunk=64)[0]),
             x, dt, A, Bm, Cm, D, st)
-    report("ssd_chunked_t256", us, "chunk=64 SSD matmul-form, state 64x64 VMEM")
+    report(f"ssd_chunked_t{t_seq}", us, "chunk=64 SSD matmul-form, state 64x64 VMEM")
 
     from repro.kernels.uct_select import ops as uo
-    n = jax.random.randint(ks[0], (1024, 64), 0, 50).astype(jnp.float32)
-    w2 = jax.random.normal(ks[1], (1024, 64)) * 3
-    vl2 = jnp.zeros((1024, 64))
+    n = jax.random.randint(ks[0], (n_nodes, 64), 0, 50).astype(jnp.float32)
+    w2 = jax.random.normal(ks[1], (n_nodes, 64)) * 3
+    vl2 = jnp.zeros((n_nodes, 64))
     pn = n.sum(-1) + 1
     us = _t(jax.jit(lambda *a: uo.uct_argmax(*a, cp=1.4, use_ref=True)),
             n, w2, vl2, pn)
-    report("uct_argmax_ref_1024x64", us, "fused score+argmax, lane-padded 128")
+    report(f"uct_argmax_ref_{n_nodes}x64", us, "fused score+argmax, lane-padded 128")

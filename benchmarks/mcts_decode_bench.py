@@ -20,7 +20,8 @@ CFG = ModelConfig(name="bench-lm", family="dense", n_layers=2, d_model=64,
 BUDGET = 48
 
 
-def run(report):
+def run(report, smoke: bool = False):
+    budget = 8 if smoke else BUDGET
     fam = get_family(CFG)
     params = fam.init(CFG, jax.random.key(0))
 
@@ -31,8 +32,8 @@ def run(report):
 
     dom = domain([1, 2, 3, 4])
     sp = SearchParams(cp=1.0, max_depth=6, puct=True)
-    for lanes in (1, 2, 4, 8):
-        cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=lanes,
+    for lanes in ((1, 4) if smoke else (1, 2, 4, 8)):
+        cfg = SearchConfig(method="pipeline", budget=budget, lanes=lanes,
                            params=sp, keep_tree=False)
         f = jax.jit(lambda r: search(dom, cfg, r).action_visits)
         f(jax.random.key(0))
@@ -40,12 +41,12 @@ def run(report):
         jax.block_until_ready(f(jax.random.key(1)))
         dt = time.perf_counter() - t0
         report(f"mcts_lm_decode_lanes{lanes}", dt * 1e6,
-               f"playouts_per_s={BUDGET / dt:,.1f}")
+               f"playouts_per_s={budget / dt:,.1f}")
 
     # batched multi-root: 4 decode requests (distinct prompts), one program
     doms = [domain(p) for p in ([1, 2, 3, 4], [5, 6, 7, 8],
                                 [9, 10, 11, 12], [2, 4, 6, 8])]
-    cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=4,
+    cfg = SearchConfig(method="pipeline", budget=budget, lanes=4,
                        params=sp, keep_tree=False)
     f = jax.jit(lambda r: search_batch(doms, cfg, r).action_visits)
     f(jax.random.key(0))
@@ -53,4 +54,4 @@ def run(report):
     jax.block_until_ready(f(jax.random.key(1)))
     dt = time.perf_counter() - t0
     report("mcts_lm_decode_batch4", dt * 1e6,
-           f"total_playouts_per_s={4 * BUDGET / dt:,.1f}")
+           f"total_playouts_per_s={4 * budget / dt:,.1f}")

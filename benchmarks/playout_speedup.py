@@ -29,26 +29,28 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def run(report):
-    seq_cfg = SearchConfig(method="sequential", budget=BUDGET, params=SP,
+def run(report, smoke: bool = False):
+    budget = 32 if smoke else BUDGET
+    reps = 1 if smoke else 3
+    seq_cfg = SearchConfig(method="sequential", budget=budget, params=SP,
                            keep_tree=False)
     seq = jax.jit(lambda r: search(DOM, seq_cfg, r).action_visits)
-    t_seq = _time(seq, jax.random.key(0))
-    report("sequential_512playouts", t_seq * 1e6,
-           f"playouts_per_s={BUDGET / t_seq:,.0f}")
-    for lanes in (1, 2, 4, 8, 16):
-        cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=lanes,
+    t_seq = _time(seq, jax.random.key(0), reps=reps)
+    report(f"sequential_{budget}playouts", t_seq * 1e6,
+           f"playouts_per_s={budget / t_seq:,.0f}")
+    for lanes in ((1, 4) if smoke else (1, 2, 4, 8, 16)):
+        cfg = SearchConfig(method="pipeline", budget=budget, lanes=lanes,
                            params=SP, keep_tree=False)
         pipe = jax.jit(lambda r: search(DOM, cfg, r).action_visits)
-        t = _time(pipe, jax.random.key(0))
-        report(f"pipeline_lanes{lanes}_512playouts", t * 1e6,
-               f"playouts_per_s={BUDGET / t:,.0f} speedup_vs_seq={t_seq / t:.2f}x")
+        t = _time(pipe, jax.random.key(0), reps=reps)
+        report(f"pipeline_lanes{lanes}_{budget}playouts", t * 1e6,
+               f"playouts_per_s={budget / t:,.0f} speedup_vs_seq={t_seq / t:.2f}x")
 
     # batched multi-root: B independent pipelines in one XLA program
-    cfg = SearchConfig(method="pipeline", budget=BUDGET, lanes=8, params=SP,
+    cfg = SearchConfig(method="pipeline", budget=budget, lanes=8, params=SP,
                        keep_tree=False)
-    for b in (1, 4, 16):
+    for b in ((1, 4) if smoke else (1, 4, 16)):
         fn = jax.jit(lambda r: search_batch([DOM] * b, cfg, r).action_visits)
-        t = _time(fn, jax.random.key(0))
-        report(f"search_batch_B{b}_512playouts", t * 1e6,
-               f"total_playouts_per_s={b * BUDGET / t:,.0f}")
+        t = _time(fn, jax.random.key(0), reps=reps)
+        report(f"search_batch_B{b}_{budget}playouts", t * 1e6,
+               f"total_playouts_per_s={b * budget / t:,.0f}")

@@ -20,32 +20,34 @@ SEEDS = 12
 TARGET = 0.7
 
 
-def _curve(method, lanes):
+def _curve(method, lanes, budgets, seeds):
     curve = {}
-    for b in BUDGETS:
+    for b in budgets:
         cfg = SearchConfig(method=method, budget=b, lanes=lanes, params=SP,
                            keep_tree=False)
         fn = jax.jit(lambda r: search(DOM, cfg, r).best_action)
-        acts = [int(fn(jax.random.key(s))) for s in range(SEEDS)]
+        acts = [int(fn(jax.random.key(s))) for s in range(seeds)]
         curve[b] = strength(acts, optimal_root_action(DOM))
     return curve
 
 
-def run(report):
+def run(report, smoke: bool = False):
+    budgets = (16, 32) if smoke else BUDGETS
+    seeds = 3 if smoke else SEEDS
     t0 = time.perf_counter()
-    seq = _curve("sequential", 1)
+    seq = _curve("sequential", 1, budgets, seeds)
     report("seq_strength_curve", (time.perf_counter() - t0) * 1e6,
            " ".join(f"{b}:{s:.2f}" for b, s in seq.items()))
 
-    for lanes in (4, 16):
-        pipe = _curve("pipeline", lanes)
+    for lanes in ((4,) if smoke else (4, 16)):
+        pipe = _curve("pipeline", lanes, budgets, seeds)
         so = search_overhead(seq, pipe, TARGET)
         report(f"pipeline_lanes{lanes}_overhead", 0.0,
                f"SO@{TARGET}={so:.2f} curve=" +
                " ".join(f"{b}:{s:.2f}" for b, s in pipe.items()))
 
-    for threads in (16, 64):
-        tp = _curve("tree", threads)
+    for threads in ((16,) if smoke else (16, 64)):
+        tp = _curve("tree", threads, budgets, seeds)
         so = search_overhead(seq, tp, TARGET)
         report(f"tree_parallel_t{threads}_overhead", 0.0,
                f"SO@{TARGET}={so:.2f} curve=" +

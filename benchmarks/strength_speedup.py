@@ -26,30 +26,32 @@ BUDGET = 256
 SEEDS = 16
 
 
-def run(report):
+def run(report, smoke: bool = False):
+    budget = 32 if smoke else BUDGET
+    seeds = 3 if smoke else SEEDS
     opt = optimal_root_action(DOM)
 
     def bench(name, method, lanes):
-        cfg = SearchConfig(method=method, budget=BUDGET, lanes=lanes,
+        cfg = SearchConfig(method=method, budget=budget, lanes=lanes,
                            params=SP, keep_tree=False)
         fn = jax.jit(lambda r: search(DOM, cfg, r))
         t0 = time.perf_counter()
         actions, dups = [], []
-        for s in range(SEEDS):
+        for s in range(seeds):
             res = fn(jax.random.key(s))
             actions.append(int(res.best_action))
             dups.append(int(res.stats["duplicates"]))
-        us = (time.perf_counter() - t0) * 1e6 / SEEDS
+        us = (time.perf_counter() - t0) * 1e6 / seeds
         st = strength(actions, opt)
         report(name, us, f"strength={st:.2f} dup_rate="
-                         f"{duplicate_rate(int(np.mean(dups)), BUDGET):.3f}")
+                         f"{duplicate_rate(int(np.mean(dups)), budget):.3f}")
         return st
 
     bench("sequential", "sequential", 1)
-    for lanes in (2, 4, 8, 16):
+    for lanes in ((4,) if smoke else (2, 4, 8, 16)):
         bench(f"pipeline_lanes{lanes}", "pipeline", lanes)
-    for threads in (8, 16, 32, 64):
+    for threads in ((16,) if smoke else (8, 16, 32, 64)):
         bench(f"tree_parallel_t{threads}", "tree", threads)
-    for workers in (4, 16):
+    for workers in ((4,) if smoke else (4, 16)):
         bench(f"root_parallel_w{workers}", "root", workers)
     bench("leaf_parallel_w4", "leaf", 4)

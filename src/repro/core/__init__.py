@@ -1,6 +1,5 @@
-# NOTE: run_pipeline/run_sequential (and the other run_* runners) are
-# deprecated shims — new code should import from repro.search instead.
-from repro.core.pipeline import PipelineConfig, run_pipeline  # noqa: F401
-from repro.core.sequential import run_sequential  # noqa: F401
+# Building blocks for repro.search (tree, stages, uct, schedule, domains).
+# The seed-era run_* entry points and their deprecation shims are gone —
+# use repro.search (DESIGN.md §6).
 from repro.core.stages import SearchParams  # noqa: F401
 from repro.core.tree import init_tree, root_action_by_visits  # noqa: F401

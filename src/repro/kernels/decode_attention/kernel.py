@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.parallel.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -87,7 +89,7 @@ def decode_attention_bhd(q, k, v, valid_len, *, scale: float,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)),
         interpret=interpret,
     )(valid_len, q, k, v)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.parallel.compat import tpu_compiler_params
+
 
 def _ssd_kernel(x_ref, dt_ref, la_ref, b_ref, c_ref, s0_ref, y_ref, sT_ref,
                 s_scr, *, chunk: int):
@@ -89,7 +91,7 @@ def ssd_bh(x, dt, la, Bm, Cm, state, *, n_heads: int, chunk: int = 64,
             jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY)),
         interpret=interpret,
     )(x, dt, la, Bm, Cm, state)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.parallel.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -49,7 +51,7 @@ def uct_argmax_tiles(child_n, child_w, child_vl, parent_n, valid, *,
         + [pl.BlockSpec((blk_r, 1), row), pl.BlockSpec((blk_r, a), row)],
         out_specs=pl.BlockSpec((blk_r, 1), row),
         out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=(pltpu.PARALLEL,)),
         interpret=interpret,
     )(child_n, child_w, child_vl, parent_n, valid)

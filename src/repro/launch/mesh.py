@@ -17,6 +17,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def make_search_mesh(n: int = 0):
+    """1-D mesh over ``n`` (default: all) devices, axis name "batch" — the
+    mesh shape `shard_search_batch` partitions batched multi-root search
+    over (DESIGN.md §9)."""
+    n = n or len(jax.devices())
+    return make_mesh((n,), ("batch",))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many devices exist (tests / CPU smoke)."""
     n = len(jax.devices())

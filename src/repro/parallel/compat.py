@@ -1,10 +1,12 @@
-"""jax version compatibility for the distributed layer.
+"""jax version compatibility for the distributed + kernel layers.
 
 The repo targets current jax (`jax.shard_map`, `check_vma`, mesh
-``axis_types``); older releases (e.g. 0.4.x, where these live under
-``jax.experimental.shard_map`` as ``check_rep`` and ``make_mesh`` has no
-``axis_types``) are supported through these two wrappers.  All repo code and
-tests go through them instead of calling jax directly.
+``axis_types``, ``pltpu.CompilerParams``); older releases (e.g. 0.4.x,
+where shard_map lives under ``jax.experimental.shard_map`` with
+``check_rep``, ``make_mesh`` has no ``axis_types``, and the compiler params
+dataclass is ``TPUCompilerParams``) are supported through these wrappers.
+All repo code and tests go through them instead of calling jax directly —
+CI validates both branches via its jax version matrix.
 """
 from __future__ import annotations
 
@@ -38,3 +40,33 @@ def make_mesh(shape, axes):
             shape, axes,
             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
     return jax.make_mesh(shape, axes)
+
+
+def mesh_num_devices(mesh) -> int:
+    """Total device count of a mesh (``mesh.size`` on every supported jax;
+    kept here so sharding callers have a single seam if the Mesh API drifts)."""
+    return int(mesh.size)
+
+
+def batch_sharding(mesh, axis=None):
+    """NamedSharding that splits leading array axes over ``axis`` (default:
+    the mesh's first axis name).  The one place the sharding-construction API
+    is touched, mirroring ``shard_map``/``make_mesh`` above."""
+    if axis is None:
+        axis = mesh.axis_names[0]
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(axis))
+
+
+def replicated_sharding(mesh):
+    """NamedSharding replicating a value on every device of ``mesh``."""
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+def tpu_compiler_params(*, dimension_semantics):
+    """Pallas TPU compiler params across the rename: current jax exposes
+    ``pltpu.CompilerParams``, 0.4.x the same dataclass as
+    ``pltpu.TPUCompilerParams``."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(dimension_semantics=dimension_semantics)

@@ -10,4 +10,5 @@ from repro.search.api import (STATS_KEYS, SearchConfig,  # noqa: F401
                               register_strategy, search, search_batch)
 from repro.search.domain import (Domain, SupportsPriors,  # noqa: F401
                                  check_domain)
+from repro.search.sharding import shard_search_batch  # noqa: F401
 from repro.search import strategies  # noqa: F401  (registers the built-ins)

@@ -167,7 +167,8 @@ def search(domain, cfg: SearchConfig, rng) -> SearchResult:
     return res
 
 
-def search_batch(domains: Sequence[Any], cfg: SearchConfig, rng) -> SearchResult:
+def search_batch(domains: Sequence[Any], cfg: SearchConfig, rng,
+                 *, mesh=None) -> SearchResult:
     """Batched multi-root search: B independent searches in ONE XLA program.
 
     ``domains`` is a sequence of B domain instances of the same type.  Fields
@@ -179,16 +180,46 @@ def search_batch(domains: Sequence[Any], cfg: SearchConfig, rng) -> SearchResult
     ``search_batch(domains, cfg, rng).action_visits[i]`` equals
     ``search(domains[i], cfg, jax.random.split(rng, B)[i]).action_visits``.
 
+    Multi-device: pass ``mesh`` (a 1-D device mesh) to shard the batch axis
+    across devices, or rely on auto-sharding — when more than one device is
+    visible and the call is not inside a trace, the batch is sharded over a
+    default all-device mesh.  Per-root results are identical either way
+    (DESIGN.md §9); pass ``mesh=False`` to force the single-device vmap.
+
     Returns a ``SearchResult`` whose every leaf gains a leading batch axis.
     """
     domains = list(domains)
     if not domains:
         raise ValueError("search_batch needs at least one domain")
+    # auto-shard only when there is real batch parallelism to split: at B=1
+    # padding to the mesh would run device_count searches to keep one
+    if mesh is None and len(domains) > 1 and jax.device_count() > 1 \
+            and not _contains_tracer(rng, *domains):
+        from repro.launch.mesh import make_search_mesh
+        mesh = make_search_mesh()
+    if mesh is not None and mesh is not False:
+        from repro.search.sharding import shard_search_batch
+        return shard_search_batch(domains, cfg, rng, mesh=mesh)
     rngs = jax.random.split(rng, len(domains))
     make, batched = _batch_domains(domains)
     if batched is None:
         return jax.vmap(lambda r: search(domains[0], cfg, r))(rngs)
     return jax.vmap(lambda bat, r: search(make(bat), cfg, r))(batched, rngs)
+
+
+def _contains_tracer(*objs) -> bool:
+    """True when any value (or dataclass field / pytree leaf thereof) is a
+    jax tracer — i.e. the caller is already inside jit/vmap, where device
+    placement is owned by the enclosing program, not by auto-sharding."""
+    for o in objs:
+        vals = ([getattr(o, f.name) for f in dataclasses.fields(o)]
+                if dataclasses.is_dataclass(o) and not isinstance(o, type)
+                else [o])
+        for v in vals:
+            if any(isinstance(leaf, jax.core.Tracer)
+                   for leaf in jax.tree_util.tree_leaves(v)):
+                return True
+    return False
 
 
 def _static_eq(a, b) -> bool:

@@ -1,0 +1,84 @@
+"""Batch-axis sharding for batched multi-root search (DESIGN.md §9).
+
+``search_batch`` runs B independent searches as one vmapped XLA program on a
+single device.  ``shard_search_batch`` runs the *same* program partitioned
+over a 1-D device mesh: the stacked-domain pytree and the per-root rng keys
+are sharded along the batch axis with ``jit`` + ``NamedSharding``, so each
+device executes B/ndev roots of an identical per-root computation — the
+array-decomposed analogue of root parallelism on "large parallel machines"
+(the regime the paper targets).
+
+Contracts (tested in tests/test_sharding.py):
+
+* **Per-root semantics are identical** to ``search_batch``: the rng is split
+  into exactly B keys *before* padding, and every batch element i reproduces
+  ``search(domains[i], cfg, jax.random.split(rng, B)[i])`` bit-for-bit on
+  ``action_visits``/``stats``.
+* **Padding**: B is padded up to a multiple of the mesh's device count by
+  repeating row 0 (a valid domain + key); padded rows run a real search
+  whose outputs are sliced off before returning.
+* **Version compat**: meshes and shardings are built through
+  ``repro.parallel.compat`` (jax 0.4.37 and current jax).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.compat import batch_sharding, mesh_num_devices
+
+
+def _default_mesh():
+    from repro.launch.mesh import make_search_mesh
+    return make_search_mesh()
+
+
+def _pad_rows(x, pad: int):
+    """Append ``pad`` copies of row 0 (works for typed prng key arrays too —
+    jnp.broadcast_to/concatenate dispatch on the extended dtype)."""
+    if pad == 0:
+        return x
+    fill = jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])
+    return jnp.concatenate([x, fill], axis=0)
+
+
+def shard_search_batch(domains, cfg, rng, *, mesh=None):
+    """``search_batch`` with the batch axis sharded over a device mesh.
+
+    ``mesh`` is a 1-D mesh (default: ``repro.launch.mesh.make_search_mesh()``
+    over every visible device).  Returns the same ``SearchResult`` pytree as
+    ``search_batch(domains, cfg, rng)`` — same leading batch axis B, same
+    per-root values — with every leaf sharded along the mesh's batch axis.
+    """
+    from repro.search.api import _batch_domains, search
+
+    domains = list(domains)
+    if not domains:
+        raise ValueError("shard_search_batch needs at least one domain")
+    if mesh is None:
+        mesh = _default_mesh()
+    ndev = mesh_num_devices(mesh)
+    b = len(domains)
+    # rng contract: split into exactly B keys BEFORE padding, so element i
+    # matches search(domains[i], cfg, jax.random.split(rng, B)[i])
+    rngs = jax.random.split(rng, b)
+    pad = (-b) % ndev
+    make, batched = _batch_domains(domains)
+
+    sharded = batch_sharding(mesh)
+    rngs = jax.device_put(_pad_rows(rngs, pad), sharded)
+    if batched is None:
+        d0 = domains[0]
+        fn = jax.jit(jax.vmap(lambda r: search(d0, cfg, r)),
+                     out_shardings=sharded)
+        res = fn(rngs)
+    else:
+        batched = jax.device_put(
+            jax.tree_util.tree_map(lambda x: _pad_rows(x, pad), batched),
+            sharded)
+        fn = jax.jit(jax.vmap(lambda bat, r: search(make(bat), cfg, r)),
+                     out_shardings=sharded)
+        res = fn(batched, rngs)
+    if pad:
+        res = jax.tree_util.tree_map(lambda x: x[:b], res)
+    return res

@@ -49,6 +49,10 @@ class EngineConfig:
     eos_token: int = -1                # -1: never stops early
     decode: str = "greedy"             # "greedy" | "mcts"
     mcts: Optional[MCTSDecodeConfig] = None   # knobs for decode="mcts"
+    # decode="mcts" device mesh: None auto-shards the per-step batched search
+    # across all visible devices (live slots spread over a 1-D mesh, DESIGN.md
+    # §9); False pins it to one device; or pass an explicit 1-D mesh.
+    mesh: Any = None
 
 
 class ServingEngine:
@@ -79,7 +83,7 @@ class ServingEngine:
             self.prefix_len = np.zeros((b,), np.int32)
             self._rng = jax.random.key(0)
             self._mcts_search = make_batched_searcher(
-                cfg, params, self.mcfg, batch=b)
+                cfg, params, self.mcfg, batch=b, mesh=engine_cfg.mesh)
         elif self.mode != "greedy":
             raise ValueError(f"unknown decode mode {engine_cfg.decode!r}")
 

@@ -29,6 +29,8 @@ import numpy as np
 
 from repro.core.domains.lm_decode import LMDecodeDomain
 from repro.models.base import ModelConfig
+from repro.parallel.compat import (batch_sharding, mesh_num_devices,
+                                   replicated_sharding)
 from repro.search import SearchConfig, SearchParams, search_batch
 
 
@@ -74,12 +76,31 @@ def mcts_decode(cfg: ModelConfig, params, prompt: np.ndarray,
 
 
 def make_batched_searcher(cfg: ModelConfig, params, dcfg: MCTSDecodeConfig,
-                          batch: int) -> Callable:
-    """Jitted ``(token_buf [B, buf_len] i32, lens [B] i32, rng) -> [B] i32``:
-    one device program that searches all B prefixes and returns each slot's
-    chosen next token.  Shapes are static, so one compilation serves every
-    decode step."""
+                          batch: int, mesh=None) -> Callable:
+    """``(token_buf [B, buf_len] i32, lens [B] i32, rng) -> [B] i32``: one
+    jitted device program that searches all B prefixes and returns each
+    slot's chosen next token.  Shapes are static, so one compilation serves
+    every decode step.
+
+    Multi-device: pass ``mesh`` (1-D, from ``make_search_mesh``) — or rely on
+    the default, which shards automatically when more than one device is
+    visible — and the searched batch is padded up to a multiple of the device
+    count and split along the batch axis, spreading live slots across the
+    mesh (DESIGN.md §9).  Pass ``mesh=False`` to force single-device vmap.
+    Padded rows consume their own rng splits, so with a mesh the sampled
+    token stream differs from the unsharded searcher (same distribution).
+    """
     scfg = dcfg.search_config()
+    # auto-shard only real batch parallelism: a 1-slot searcher padded to the
+    # mesh would run device_count searches per token to keep one
+    if mesh is None and batch > 1 and jax.device_count() > 1:
+        from repro.launch.mesh import make_search_mesh
+        mesh = make_search_mesh()
+    if mesh is False:
+        mesh = None
+
+    ndev = mesh_num_devices(mesh) if mesh is not None else 1
+    padded = batch + ((-batch) % ndev)
 
     def root_topk(buf_row, len_row):
         d = _domain(cfg, params, buf_row, dcfg, prompt_len=len_row)
@@ -88,22 +109,43 @@ def make_batched_searcher(cfg: ModelConfig, params, dcfg: MCTSDecodeConfig,
 
     def step(buf, lens, rng):
         domains = [_domain(cfg, params, buf[i], dcfg, prompt_len=lens[i])
-                   for i in range(batch)]
+                   for i in range(padded)]
         res = search_batch(domains, scfg, rng)
-        tops = jax.vmap(root_topk)(buf, lens)              # [B, A], one pass
-        return tops[jnp.arange(batch), res.best_action].astype(jnp.int32)
+        tops = jax.vmap(root_topk)(buf, lens)            # [padded, A], one pass
+        return tops[jnp.arange(padded), res.best_action].astype(jnp.int32)
 
-    return jax.jit(step)
+    if mesh is None:
+        return jax.jit(step)
+
+    # the batch axis of buf/lens (and of every intermediate, via sharding
+    # propagation) is split over the mesh; the scalar rng key is replicated
+    shard = batch_sharding(mesh)
+    repl = replicated_sharding(mesh)
+    jstep = jax.jit(step, in_shardings=(shard, shard, repl),
+                    out_shardings=shard)
+
+    def sharded_step(buf, lens, rng):
+        extra = padded - batch
+        if extra:
+            # pad dead rows (len 0 == empty slot: searched, output ignored)
+            buf = jnp.concatenate(
+                [buf, jnp.zeros((extra, buf.shape[1]), buf.dtype)])
+            lens = jnp.concatenate([lens, jnp.zeros((extra,), lens.dtype)])
+        return jstep(buf, lens, rng)[:batch]
+
+    return sharded_step
 
 
 def mcts_decode_batch(cfg: ModelConfig, params, prompts: np.ndarray,
-                      n_tokens: int, dcfg: MCTSDecodeConfig, seed: int = 0
-                      ) -> List[List[int]]:
+                      n_tokens: int, dcfg: MCTSDecodeConfig, seed: int = 0,
+                      mesh=None) -> List[List[int]]:
     """Decode B prompts together: each of the ``n_tokens`` steps is a single
     batched multi-root search over all requests.
 
     ``prompts`` is [B, plen] int32 (equal lengths; pad upstream if needed —
-    per-request true lengths are supported via the engine path).
+    per-request true lengths are supported via the engine path).  ``mesh``
+    as in ``make_batched_searcher``: None auto-shards the searched batch
+    over multiple devices, False forces single-device vmap.
     """
     prompts = np.asarray(prompts, np.int32)
     if prompts.ndim != 2:
@@ -112,7 +154,7 @@ def mcts_decode_batch(cfg: ModelConfig, params, prompts: np.ndarray,
     buf = np.zeros((b, plen + n_tokens), np.int32)
     buf[:, :plen] = prompts
     lens = np.full((b,), plen, np.int32)
-    searcher = make_batched_searcher(cfg, params, dcfg, batch=b)
+    searcher = make_batched_searcher(cfg, params, dcfg, batch=b, mesh=mesh)
     rng = jax.random.key(seed)
     out: List[List[int]] = [[] for _ in range(b)]
     for _ in range(n_tokens):

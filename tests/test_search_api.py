@@ -1,8 +1,6 @@
 """The unified ``repro.search`` API: cross-strategy parity at equal budget,
 batched multi-root search, the Domain protocol, the registry, and the
-deprecated ``core.run_*`` shims."""
-import warnings
-
+removal of the deprecated ``core.run_*`` shims."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -189,26 +187,15 @@ def test_register_strategy_round_trip():
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims stay faithful for one release
+# the deprecated run_* shims are gone (grace period ended with PR 1)
 # ---------------------------------------------------------------------------
-def test_deprecated_shims_warn_and_match_new_api():
-    from repro.core.pipeline import PipelineConfig, run_pipeline
-    from repro.core.sequential import run_sequential
-    from repro.core.tree import root_action_by_visits
+def test_deprecated_shims_are_removed():
+    import importlib
 
-    with pytest.warns(DeprecationWarning):
-        tree, stats = run_sequential(DOM, SP, 64, jax.random.key(0))
-    new = search(DOM, SearchConfig(method="sequential", budget=64, params=SP),
-                 jax.random.key(0))
-    assert int(stats["playouts"]) == int(new.stats["playouts"])
-    assert int(root_action_by_visits(tree)) == int(new.best_action)
-
-    with pytest.warns(DeprecationWarning):
-        tree, stats = run_pipeline(
-            DOM, PipelineConfig(budget=64, lanes=4, params=SP), jax.random.key(0))
-    new = search(DOM, SearchConfig(method="pipeline", budget=64, lanes=4,
-                                   params=SP), jax.random.key(0))
-    assert int(stats["playouts"]) == int(new.stats["playouts"])
-    assert int(stats["duplicates"]) == int(new.stats["duplicates"])
-    assert set(stats) == {"playouts", "duplicates", "ticks", "mean_occupancy",
-                          "dup_per_tick"}
+    import repro.core as core
+    for name in ("run_sequential", "run_pipeline", "PipelineConfig"):
+        assert not hasattr(core, name)
+    for mod in ("sequential", "pipeline", "root_parallel", "leaf_parallel",
+                "tree_parallel"):
+        with pytest.raises(ModuleNotFoundError):
+            importlib.import_module(f"repro.core.{mod}")

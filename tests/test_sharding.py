@@ -1,0 +1,185 @@
+"""Sharded batched multi-root search (DESIGN.md §9): ``shard_search_batch``
+reproduces the single-device vmap semantics bit-for-bit, including when B is
+not a multiple of the device count (padding contract).
+
+The in-process tests need a multi-device runtime and run in the CI
+multi-device job (8 forced host devices); on a single-device session one
+subprocess test re-runs the core parity checks on 8 fake devices so tier-1
+always exercises the path.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.domains.pgame import PGameDomain
+from repro.search import (STATS_KEYS, SearchConfig, SearchParams, search,
+                          search_batch, shard_search_batch)
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
+SP = SearchParams(cp=0.7, max_depth=6)
+METHODS = ("sequential", "root", "leaf", "tree", "pipeline")
+
+multi = jax.device_count() >= 2
+needs_mesh = pytest.mark.skipif(
+    not multi, reason="needs >1 device (run in the CI multi-device job; the "
+    "subprocess test below covers single-device sessions)")
+
+
+def _vmap_ref(domains, cfg, rng):
+    """The documented per-root reference: element i ==
+    search(domains[i], cfg, jax.random.split(rng, B)[i])."""
+    keys = jax.random.split(rng, len(domains))
+    return [search(d, cfg, k) for d, k in zip(domains, keys)]
+
+
+def _assert_matches(res, refs):
+    assert res.action_visits.shape == (len(refs), DOM.num_actions)
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(np.asarray(res.action_visits[i]),
+                                      np.asarray(ref.action_visits))
+        np.testing.assert_allclose(np.asarray(res.action_value[i]),
+                                   np.asarray(ref.action_value), rtol=1e-5)
+        assert int(res.best_action[i]) == int(ref.best_action)
+        for k in STATS_KEYS:
+            assert int(res.stats[k][i]) == int(ref.stats[k])
+
+
+@needs_mesh
+@pytest.mark.parametrize("method", METHODS)
+def test_sharded_parity_all_strategies(method):
+    """Device-count-divisible B: every strategy matches the vmap semantics
+    bit-for-bit on action_visits and the whole stats schema."""
+    cfg = SearchConfig(method=method, budget=32, lanes=4, params=SP,
+                       keep_tree=False)
+    rng = jax.random.key(7)
+    b = jax.device_count()
+    res = shard_search_batch([DOM] * b, cfg, rng)
+    _assert_matches(res, _vmap_ref([DOM] * b, cfg, rng))
+
+
+@needs_mesh
+@pytest.mark.parametrize("b", (1, 5, 11))
+def test_sharded_parity_with_padding(b):
+    """B not divisible by the device count: rows are padded to the mesh and
+    the pad sliced off — results identical to the unpadded contract."""
+    cfg = SearchConfig(method="pipeline", budget=32, lanes=4, params=SP,
+                       keep_tree=False)
+    rng = jax.random.key(1)
+    res = shard_search_batch([DOM] * b, cfg, rng)
+    _assert_matches(res, _vmap_ref([DOM] * b, cfg, rng))
+
+
+@needs_mesh
+def test_sharded_parity_varying_fields():
+    """The stacked-varying-fields path shards too (each root its own
+    threshold), with the same per-element parity."""
+    doms = [PGameDomain(num_actions=4, game_depth=6, binary_reward=True,
+                        seed=3, threshold=t) for t in (0.3, 0.45, 0.6)]
+    cfg = SearchConfig(method="sequential", budget=32, params=SP,
+                       keep_tree=False)
+    rng = jax.random.key(2)
+    res = shard_search_batch(doms, cfg, rng)
+    _assert_matches(res, _vmap_ref(doms, cfg, rng))
+
+
+@needs_mesh
+def test_search_batch_auto_shards_and_matches():
+    """With >1 visible device, plain ``search_batch`` auto-shards (and the
+    explicit mesh= / mesh=False spellings agree with it)."""
+    from repro.launch.mesh import make_search_mesh
+    cfg = SearchConfig(method="tree", budget=32, lanes=4, params=SP,
+                       keep_tree=False)
+    rng = jax.random.key(3)
+    doms = [DOM] * 6
+    auto = search_batch(doms, cfg, rng)
+    _assert_matches(auto, _vmap_ref(doms, cfg, rng))
+    explicit = search_batch(doms, cfg, rng, mesh=make_search_mesh())
+    forced_vmap = search_batch(doms, cfg, rng, mesh=False)
+    for other in (explicit, forced_vmap):
+        np.testing.assert_array_equal(np.asarray(auto.action_visits),
+                                      np.asarray(other.action_visits))
+
+
+@needs_mesh
+def test_sharded_keep_tree_and_output_sharding():
+    """keep_tree=True round-trips the full tree pytree, and outputs really
+    are split along the mesh's batch axis."""
+    cfg = SearchConfig(method="sequential", budget=16, params=SP)
+    b = jax.device_count()
+    res = shard_search_batch([DOM] * b, cfg, jax.random.key(0))
+    assert res.tree is not None
+    assert res.tree["visits"].shape[0] == b
+    spec = res.action_visits.sharding.spec
+    assert tuple(spec)[:1] == ("batch",)
+
+
+@needs_mesh
+def test_sharded_searcher_spreads_slots():
+    """The serving searcher pads the slot batch to the mesh and returns one
+    token per real slot."""
+    import jax.numpy as jnp
+
+    from repro.models.base import ModelConfig, get_family
+    from repro.serving import MCTSDecodeConfig
+    from repro.serving.mcts_decode import make_batched_searcher
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", ce_chunk=8, remat=False)
+    params = get_family(cfg).init(cfg, jax.random.key(0))
+    dcfg = MCTSDecodeConfig(num_actions=3, budget=6, lanes=2, search_depth=2,
+                            rollout_len=1)
+    batch = 3                                  # pads to the device count
+    searcher = make_batched_searcher(cfg, params, dcfg, batch=batch)
+    buf = jnp.zeros((batch, 8), jnp.int32).at[:, :2].set(
+        jnp.array([[1, 2], [3, 4], [5, 6]], jnp.int32))
+    toks = searcher(buf, jnp.full((batch,), 2, jnp.int32), jax.random.key(1))
+    assert toks.shape == (batch,)
+    assert all(0 <= int(t) < cfg.vocab_size for t in toks)
+
+
+def test_shard_parity_subprocess_8dev():
+    """Single-device sessions: the same parity checks on 8 forced host
+    devices (the pattern of tests/test_distributed.py)."""
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.core.domains.pgame import PGameDomain
+        from repro.search import (SearchConfig, SearchParams, search,
+                                  search_batch, shard_search_batch)
+        DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False,
+                          seed=3)
+        SP = SearchParams(cp=0.7, max_depth=6)
+        rng = jax.random.key(42)
+        assert jax.device_count() == 8
+        for method, b in (("sequential", 8), ("pipeline", 5)):
+            cfg = SearchConfig(method=method, budget=32, lanes=4, params=SP,
+                               keep_tree=False)
+            res = shard_search_batch([DOM] * b, cfg, rng)
+            keys = jax.random.split(rng, b)
+            for i in range(b):
+                ind = search(DOM, cfg, keys[i])
+                np.testing.assert_array_equal(
+                    np.asarray(res.action_visits[i]),
+                    np.asarray(ind.action_visits))
+        # auto-sharding spelling agrees
+        cfg = SearchConfig(method="pipeline", budget=32, lanes=4, params=SP,
+                           keep_tree=False)
+        auto = search_batch([DOM] * 5, cfg, rng)
+        shard = shard_search_batch([DOM] * 5, cfg, rng)
+        np.testing.assert_array_equal(np.asarray(auto.action_visits),
+                                      np.asarray(shard.action_visits))
+        print("OK")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "JAX_PLATFORMS": "cpu",
+             "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "OK" in r.stdout

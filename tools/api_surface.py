@@ -2,10 +2,10 @@
 public search entry points.
 
 Fails (exit 1) if any module under ``src/repro`` *outside* ``repro/search``
-defines a new module-level public ``run_*`` function.  The legacy deprecated
-shims (and the non-search ``run_*`` helpers that predate this policy) are
-pinned in ``ALLOWED``; removing one is fine, adding one is not — add new
-strategies via ``repro.search.register_strategy`` instead (DESIGN.md §8).
+defines a new module-level public ``run_*`` function.  The non-search
+``run_*`` helpers that predate this policy are pinned in ``ALLOWED``;
+removing one is fine, adding one is not — add new strategies via
+``repro.search.register_strategy`` instead (DESIGN.md §8).
 
 Usage:  python tools/api_surface.py [--root PATH]
 """
@@ -17,13 +17,9 @@ import re
 import sys
 
 # module path (relative to src/) -> permitted module-level run_* names
+# (the deprecated core.run_* shims were removed after their grace period;
+# only non-search helpers that happen to match the pattern remain)
 ALLOWED = {
-    "repro/core/sequential.py": {"run_sequential"},
-    "repro/core/pipeline.py": {"run_pipeline", "run_pipeline_jit"},
-    "repro/core/root_parallel.py": {"run_root_parallel"},
-    "repro/core/leaf_parallel.py": {"run_leaf_parallel"},
-    "repro/core/tree_parallel.py": {"run_tree_parallel"},
-    # non-search helpers that happen to match the pattern
     "repro/runtime/ft.py": {"run_with_restarts"},
     "repro/launch/dryrun.py": {"run_cell"},
 }
