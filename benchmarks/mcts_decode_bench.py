@@ -1,8 +1,9 @@
 """MCTS-LM decode throughput (the paper's technique as a serving feature):
 playouts/s of the pipelined search over a tiny LM evaluator through the
-unified ``repro.search`` API — lanes sweep, plus batched multi-root search
-(``search_batch``) over several decode requests in one device program —
-the modern instantiation where Playout = NN evaluation (DESIGN.md §2)."""
+unified ``repro.search`` API — lanes sweep, batched multi-root search
+(``search_batch``) over several decode requests in one device program, and
+the KV-cached vs uncached domain comparison (DESIGN.md §10) — the modern
+instantiation where Playout = NN evaluation (DESIGN.md §2)."""
 from __future__ import annotations
 
 import time
@@ -10,7 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.domains.lm_decode import LMDecodeDomain
+from repro.core.domains.lm_decode import CachedLMDecodeDomain, LMDecodeDomain
 from repro.models.base import ModelConfig, get_family
 from repro.search import SearchConfig, SearchParams, search, search_batch
 
@@ -55,3 +56,32 @@ def run(report, smoke: bool = False):
     dt = time.perf_counter() - t0
     report("mcts_lm_decode_batch4", dt * 1e6,
            f"total_playouts_per_s={4 * budget / dt:,.1f}")
+
+    # KV-cached vs uncached domain at the ISSUE's reference point
+    # (rollout_len=4, search_depth=8, a 32-token prompt): the uncached
+    # domain re-runs the whole prefix per expand/playout token, the cached
+    # one prefills once per search and pays one incremental step per token
+    # (DESIGN.md §10).  CI asserts the cached row lands in BENCH_pr.json
+    # and is faster.
+    prompt32 = list(range(1, 33))
+    sp8 = SearchParams(cp=1.0, max_depth=8, puct=True)
+    cfg = SearchConfig(method="pipeline", budget=budget, lanes=4,
+                       params=sp8, keep_tree=False)
+    times = {}
+    for name, cls in (("uncached", LMDecodeDomain),
+                      ("cached", CachedLMDecodeDomain)):
+        dom = cls(cfg=CFG, params=params,
+                  prompt=jnp.asarray(prompt32, jnp.int32),
+                  num_actions=4, search_depth=8, rollout_len=4)
+        f = jax.jit(lambda r, d=dom: search(d, cfg, r).action_visits)
+        f(jax.random.key(0))
+        best = float("inf")
+        for rep in range(3):            # best-of-3: CI gates on this margin
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(jax.random.key(1 + rep)))
+            best = min(best, time.perf_counter() - t0)
+        times[name] = best
+        extra = ("" if name == "uncached" else
+                 f" speedup_x={times['uncached'] / best:.2f}")
+        report(f"mcts_lm_decode_{name}", best * 1e6,
+               f"playouts_per_s={budget / best:,.1f}{extra}")

@@ -5,10 +5,22 @@ State = token buffer + length.  Actions = the top-A next tokens under the
 policy LM.  Playout = greedy rollout of ``rollout_len`` tokens; reward =
 exp(mean logprob) in (0, 1].  Priors = renormalized top-A policy probs (PUCT).
 
-This generic (uncached) domain re-evaluates the prefix per call — correct and
-simple, used by core tests and examples.  The production serving path
-(repro.serving.mcts_decode) batches playouts across lanes, which is exactly
-the paper's parallel-playout-stage load balancing.
+Two variants (DESIGN.md §10):
+
+* ``LMDecodeDomain`` — generic (uncached): every step/playout re-evaluates
+  the whole prefix.  Correct and simple, used by core tests and examples,
+  and the parity oracle for the cached variant.
+* ``CachedLMDecodeDomain`` — KV-cache-aware: the prompt is prefilled ONCE
+  per search (at ``root_state``) and the per-sequence cache is threaded
+  through the tree state, so every expand costs one incremental token and
+  every playout ``rollout_len`` incremental tokens instead of full-prefix
+  forwards.  Uses the family's ``prefill_fn``/``step_fn`` when implemented
+  (dense: ``kernels/decode_attention``), else the pure-JAX fallback in
+  ``models.base`` (correct for every family, just uncached).
+
+The production serving path (repro.serving.mcts_decode) batches playouts
+across lanes, which is exactly the paper's parallel-playout-stage load
+balancing.
 """
 from __future__ import annotations
 
@@ -18,7 +30,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models.base import ModelConfig, get_family
+from repro.models.base import ModelConfig, get_family, seq_prefill, seq_step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,3 +102,65 @@ class LMDecodeDomain:
     def priors(self, state):
         top_vals, _ = self._topk(state)
         return jax.nn.softmax(top_vals)
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedLMDecodeDomain(LMDecodeDomain):
+    """KV-cache-aware variant: same decisions as ``LMDecodeDomain`` (up to
+    float noise), amortized compute.
+
+    State = ``{"len", "cache", "logits"}`` — the cache IS the token history
+    (per-layer K/V rows for the dense family; a token buffer for the generic
+    fallback) and ``logits`` are the next-token logits the prefix implies,
+    so ``step``/``priors`` need no model call for the *current* position and
+    each appended token costs one ``seq_step``.  The prompt is prefilled
+    exactly once, in ``root_state`` — shared by every expand and playout of
+    the search (the tree's structure-of-arrays state fans it out).
+
+    Memory note: every tree node (and pipeline buffer lane) carries a full
+    cache copy ``[L, max_len, Hkv, D]`` — the classic KV-cache trade of
+    memory for compute, scaled here by tree capacity (DESIGN.md §10).
+    """
+
+    def root_state(self):
+        toks = jnp.zeros((self.max_len,), jnp.int32)
+        toks = jax.lax.dynamic_update_slice(toks, self.prompt.astype(jnp.int32), (0,))
+        logits, cache = seq_prefill(self.cfg, self.params, toks, self._plen())
+        return {"len": self._plen(), "cache": cache, "logits": logits}
+
+    # -- internals ----------------------------------------------------------
+    def _state_logits(self, state):
+        return state["logits"].astype(jnp.float32) / self.temperature
+
+    def _topk(self, state):
+        return jax.lax.top_k(self._state_logits(state), self.num_actions)
+
+    # -- domain API ----------------------------------------------------------
+    def step(self, state, action):
+        _, top_toks = self._topk(state)
+        tok = top_toks[action].astype(jnp.int32)
+        logits, cache = seq_step(self.cfg, self.params, state["cache"], tok,
+                                 state["len"])
+        return {"len": state["len"] + 1, "cache": cache, "logits": logits}
+
+    def playout(self, state, rng):
+        """Greedy rollout; reward = exp(mean next-token logprob).  Matches
+        the uncached playout token-for-token: iteration t consumes the
+        logits the previous step produced instead of a full forward."""
+        def body(c, _):
+            logits, cache, ln, acc = c
+            scaled = logits.astype(jnp.float32) / self.temperature
+            logp = jax.nn.log_softmax(scaled)
+            tok = jnp.argmax(scaled).astype(jnp.int32)
+            acc = acc + logp[tok]
+            logits, cache = seq_step(self.cfg, self.params, cache, tok, ln)
+            return (logits, cache, ln + 1, acc), None
+
+        (_, _, _, acc), _ = jax.lax.scan(
+            body, (state["logits"], state["cache"], state["len"],
+                   jnp.float32(0.0)),
+            None, length=self.rollout_len)
+        return jnp.exp(acc / self.rollout_len)
+
+    # is_terminal and priors are inherited: both consume only state["len"]
+    # and _topk, which reads the cached logits.

@@ -12,6 +12,23 @@ vlm).  The family module implements the functional model API:
     param_axes(cfg)                     -> logical-axis pytree (same structure
                                            as params; tuples of axis names)
 
+Incremental single-sequence decode (optional; KV-cache-aware MCTS decode):
+
+    prefill_fn(cfg, params, toks, plen) -> (logits, cache)
+    step_fn(cfg, params, cache, tok, pos) -> (logits, cache)
+
+Unlike ``prefill``/``decode_step`` these are *unbatched* (no leading batch
+axis; ``tok``/``pos`` are scalars, ``logits`` is ``[V]`` fp32) so search
+strategies can thread the cache through vmapped/scanned tree state
+(``core.domains.lm_decode.CachedLMDecodeDomain``).  ``prefill_fn`` runs the
+whole padded buffer ``toks`` once and returns the cache plus the next-token
+logits at position ``plen - 1``; ``step_fn`` appends one token at ``pos``
+and returns the logits for position ``pos + 1``.  Causality means cache
+entries past the valid prefix are garbage-but-masked, never observed.
+Families that do not implement the pair fall back to a pure-JAX generic
+path (``seq_prefill``/``seq_step`` below) that recomputes the full forward
+from a token-buffer "cache" — correct for every family, just uncached.
+
 Params are plain nested dicts of jnp arrays; "stacked" per-layer weights carry
 a leading ``layers`` logical axis and are consumed by ``lax.scan``.
 """
@@ -151,6 +168,56 @@ def get_family(cfg_or_name):
         import importlib
         importlib.import_module(f"repro.models.{_FAMILY_MODULES.get(name, name)}")
     return _FAMILIES[name]
+
+
+# ---------------------------------------------------------------------------
+# incremental single-sequence decode (unbatched; see module docstring)
+# ---------------------------------------------------------------------------
+def _generic_prefill(cfg: ModelConfig, params, toks, plen):
+    """Fallback prefill: the "cache" is just the token buffer itself."""
+    fam = get_family(cfg)
+    logits = fam.logits_fn(cfg, params, toks[None])[0]
+    last = jax.lax.dynamic_index_in_dim(
+        logits, jnp.asarray(plen, jnp.int32) - 1, axis=0, keepdims=False)
+    return last.astype(jnp.float32), {"toks": toks.astype(jnp.int32)}
+
+
+def _generic_step(cfg: ModelConfig, params, cache, tok, pos):
+    """Fallback step: write ``tok`` at ``pos`` and re-run the full forward.
+
+    Functionally identical to the cached path (same logits), with no
+    compute amortization — the contract the parity tests pin down.
+    """
+    fam = get_family(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    toks = cache["toks"].at[pos].set(jnp.asarray(tok, jnp.int32), mode="drop")
+    logits = fam.logits_fn(cfg, params, toks[None])[0]
+    out = jax.lax.dynamic_index_in_dim(logits, pos, axis=0, keepdims=False)
+    return out.astype(jnp.float32), {"toks": toks}
+
+
+def seq_prefill(cfg: ModelConfig, params, toks, plen):
+    """Single-sequence prefill: ``toks [S] i32`` (padded buffer), ``plen``
+    scalar true length -> ``(logits [V] f32 at plen-1, cache)``.  Dispatches
+    to the family's ``prefill_fn`` when present, else the generic fallback.
+    """
+    fam = get_family(cfg)
+    fn = getattr(fam, "prefill_fn", None)
+    if fn is None:
+        return _generic_prefill(cfg, params, toks, plen)
+    return fn(cfg, params, toks, plen)
+
+
+def seq_step(cfg: ModelConfig, params, cache, tok, pos):
+    """Single-sequence incremental step: append ``tok`` (scalar i32) at
+    ``pos`` -> ``(logits [V] f32 for pos+1, cache)``.  ``cache`` must come
+    from ``seq_prefill`` (or a prior ``seq_step``) with the same cfg/params.
+    """
+    fam = get_family(cfg)
+    fn = getattr(fam, "step_fn", None)
+    if fn is None:
+        return _generic_step(cfg, params, cache, tok, pos)
+    return fn(cfg, params, cache, tok, pos)
 
 
 # ---------------------------------------------------------------------------

@@ -161,8 +161,10 @@ def cache_axes(cfg: ModelConfig):
             "pos": ("batch",)}
 
 
-def prefill(cfg: ModelConfig, params, tokens, cache):
-    """Run the prompt, fill the cache, return last-position logits."""
+def _prefill_stack(cfg: ModelConfig, params, tokens):
+    """Shared prompt pass: tokens [B,S] -> (final-normed hidden [B,S,D],
+    per-layer ks, vs [L,B,S,Hkv,D]).  Backs both the batched ``prefill`` and
+    the unbatched ``prefill_fn`` so the block arithmetic exists once."""
     b, s = tokens.shape
     x = L.embed_tokens(cfg, params["embed"], tokens)
     cos, sin = L.rope_freqs(cfg, jnp.arange(s))
@@ -182,13 +184,19 @@ def prefill(cfg: ModelConfig, params, tokens, cache):
     if cfg.remat:
         body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    return L.apply_norm(cfg, params["final_norm"], x), ks, vs
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache):
+    """Run the prompt, fill the cache, return last-position logits."""
+    b, s = tokens.shape
+    x, ks, vs = _prefill_stack(cfg, params, tokens)
     cache = dict(cache)
     cache["k"] = jax.lax.dynamic_update_slice(
         cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
     cache["v"] = jax.lax.dynamic_update_slice(
         cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
     cache["pos"] = jnp.full((b,), s, jnp.int32)
-    x = L.apply_norm(cfg, params["final_norm"], x)
     return L.lm_head(cfg, params["embed"], x[:, -1:]), cache
 
 
@@ -213,6 +221,65 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
     cache["pos"] = pos + 1
     x = L.apply_norm(cfg, params["final_norm"], x)
     return L.lm_head(cfg, params["embed"], x), cache
+
+
+# ---------------------------------------------------------------------------
+# incremental single-sequence decode (unbatched; base.seq_prefill/seq_step)
+# ---------------------------------------------------------------------------
+def prefill_fn(cfg: ModelConfig, params, toks, plen):
+    """toks [S] i32 padded buffer, plen scalar true length ->
+    (logits [V] f32 at position plen-1, cache {k, v: [L, S, Hkv, D]}).
+
+    Runs the whole buffer once (causal), so cache rows at positions >= plen
+    hold K/V of padding tokens — masked by ``step_fn``'s valid length and
+    overwritten as the sequence grows, never observed.
+    """
+    x, ks, vs = _prefill_stack(cfg, params, toks[None])
+    h_last = jax.lax.dynamic_index_in_dim(
+        x[0], jnp.asarray(plen, jnp.int32) - 1, axis=0, keepdims=False)
+    logits = L.lm_head(cfg, params["embed"], h_last[None, None])[0, 0]
+    return logits.astype(jnp.float32), {"k": ks[:, 0], "v": vs[:, 0]}
+
+
+def step_fn(cfg: ModelConfig, params, cache, tok, pos):
+    """One incremental token: cache {k, v: [L, S, Hkv, D]}, tok/pos scalars
+    -> (logits [V] f32 for position pos+1, cache).  Attention reads the
+    per-layer cache row through ``kernels/decode_attention`` (Pallas on TPU
+    when ``cfg.use_pallas``, the jnp flash-decode oracle elsewhere).
+
+    Kept as its own scan body rather than reusing ``_block``: the cache here
+    is unbatched (rows are vmapped by the search strategies), and the
+    attention is pinned to the decode kernel's flash path instead of
+    ``L.attention``'s sdpa-with-bias dispatch.
+    """
+    from repro.kernels.decode_attention import ops as da
+
+    pos = jnp.asarray(pos, jnp.int32)
+    x = L.embed_tokens(cfg, params["embed"],
+                       jnp.asarray(tok, jnp.int32).reshape(1, 1))
+    cos, sin = L.rope_freqs(cfg, pos.reshape(1, 1))
+    valid = (pos + 1).reshape(1)
+
+    def body(carry, xs):
+        y = carry
+        lp, ck, cv = xs                              # ck/cv [S, Hkv, D]
+        h = L.apply_norm(cfg, lp["ln1"], y)
+        q, k, v = L.gqa_project_qkv(cfg, lp["attn"], h)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        ck = jax.lax.dynamic_update_slice(ck, k[0].astype(ck.dtype), (pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v[0].astype(cv.dtype), (pos, 0, 0))
+        attn_out = da.decode_attention(q, ck[None], cv[None], valid,
+                                       use_ref=not cfg.use_pallas)
+        y = y + (attn_out.reshape(1, 1, -1) @ lp["attn"]["wo"]) * cfg.residual_scale
+        h = L.apply_norm(cfg, lp["ln2"], y)
+        y = y + L.apply_mlp(cfg, lp["mlp"], h) * cfg.residual_scale
+        return y, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_head(cfg, params["embed"], x)[0, 0]
+    return logits.astype(jnp.float32), {"k": ks, "v": vs}
 
 
 register_family("dense")(__import__("sys").modules[__name__])

@@ -14,7 +14,11 @@ Two per-slot decode modes (EngineConfig.decode):
   (repro.search.search_batch via make_batched_searcher) over all live
   slots' prefixes and commits each slot's chosen token: the paper's search
   as a serving feature, one device program per emitted token across the
-  whole batch (DESIGN.md §5).
+  whole batch (DESIGN.md §5).  KV-cache-aware by default
+  (``MCTSDecodeConfig.cached``): inside that program each slot gets its own
+  cache row, prefilled once per search and shared by every playout of that
+  root; with ``EngineConfig.mesh`` the rows shard along the slot axis like
+  the prefix buffer (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -64,7 +68,9 @@ class ServingEngine:
         self.ecfg = engine_cfg
         self.fam = get_family(cfg)
         b, s = engine_cfg.max_batch, engine_cfg.max_seq
-        # KV cache only backs the greedy path; mcts mode re-reads prefixes
+        # the persistent [L, B, S, ...] cache backs the greedy path; mcts
+        # mode's per-slot cache rows live inside the per-token search
+        # program instead (prefilled from prefix_buf, DESIGN.md §10)
         self.cache = (self.fam.init_cache(cfg, b, s)
                       if engine_cfg.decode == "greedy" else None)
         self.slots: List[Optional[Request]] = [None] * b
@@ -113,8 +119,11 @@ class ServingEngine:
                 continue
             plen = len(req.prompt)
             if self.mode == "mcts":
-                # no KV prefill: the searcher re-reads the prefix buffer; the
-                # first token comes from the first search step
+                # no host-side KV prefill: the searcher prefills this slot's
+                # cache row from the prefix buffer inside each per-token
+                # program (zeroing the buffer row is the slot reset — no
+                # state outlives the request); the first token comes from
+                # the first search step
                 self.slots[i] = req
                 self.remaining[i] = req.max_new_tokens
                 self.prefix_buf[i] = 0

@@ -17,6 +17,13 @@ Two granularities:
 
 ``make_batched_searcher`` is the factory behind both ``mcts_decode_batch``
 and ``ServingEngine``'s MCTS-decode slots (DESIGN.md §5).
+
+KV-cache-aware by default (``MCTSDecodeConfig.cached``): each slot's root
+prefix is prefilled once per search via ``CachedLMDecodeDomain`` and the
+per-slot cache rows live inside the per-token program, batch-sharded along
+the slot axis exactly like ``buf``/``lens`` under a mesh (DESIGN.md §10).
+Prompts may be ragged — they share one padded buffer shape with true
+lengths riding along as ``prompt_len``.
 """
 from __future__ import annotations
 
@@ -27,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.domains.lm_decode import LMDecodeDomain
+from repro.core.domains.lm_decode import CachedLMDecodeDomain, LMDecodeDomain
 from repro.models.base import ModelConfig
 from repro.parallel.compat import (batch_sharding, mesh_num_devices,
                                    replicated_sharding)
@@ -44,6 +51,11 @@ class MCTSDecodeConfig:
     rollout_len: int = 4
     cp: float = 1.0
     temperature: float = 1.0
+    # KV-cache-aware decode (DESIGN.md §10): each slot's prefix is prefilled
+    # once per search and shared by all of that root's expands/playouts via
+    # CachedLMDecodeDomain.  False restores the uncached domain (the parity
+    # oracle, and a fallback for debugging numerics).
+    cached: bool = True
 
     def search_config(self) -> SearchConfig:
         return SearchConfig(
@@ -55,7 +67,8 @@ class MCTSDecodeConfig:
 
 def _domain(cfg: ModelConfig, params, prompt, dcfg: MCTSDecodeConfig,
             prompt_len=None) -> LMDecodeDomain:
-    return LMDecodeDomain(
+    cls = CachedLMDecodeDomain if dcfg.cached else LMDecodeDomain
+    return cls(
         cfg=cfg, params=params, prompt=prompt,
         num_actions=dcfg.num_actions, search_depth=dcfg.search_depth,
         rollout_len=dcfg.rollout_len, temperature=dcfg.temperature,
@@ -136,24 +149,48 @@ def make_batched_searcher(cfg: ModelConfig, params, dcfg: MCTSDecodeConfig,
     return sharded_step
 
 
-def mcts_decode_batch(cfg: ModelConfig, params, prompts: np.ndarray,
+def _pad_prompts(prompts, n_tokens: int):
+    """Normalize equal-length [B, plen] or ragged list-of-sequences prompts
+    into (padded buffer [B, max_plen + n_tokens] i32, true lengths [B] i32).
+    """
+    if isinstance(prompts, (list, tuple)):
+        rows = [np.asarray(p, np.int32) for p in prompts]
+        if any(r.ndim != 1 for r in rows):
+            raise ValueError("ragged prompts must be a list of 1-D token "
+                             f"sequences, got ndims {[r.ndim for r in rows]}")
+    else:
+        arr = np.asarray(prompts, np.int32)   # np or jax array-likes
+        if arr.ndim != 2:
+            raise ValueError("prompts must be [B, plen] or a (ragged) list "
+                             f"of 1-D sequences, got shape {arr.shape}")
+        rows = list(arr)
+    if not rows:
+        raise ValueError("prompts must contain at least one request")
+    lens = np.array([len(r) for r in rows], np.int32)
+    if (lens == 0).any():
+        raise ValueError("every prompt needs at least one token, got "
+                         f"lengths {lens.tolist()}")
+    buf = np.zeros((len(rows), int(lens.max()) + n_tokens), np.int32)
+    for i, r in enumerate(rows):
+        buf[i, : len(r)] = r
+    return buf, lens
+
+
+def mcts_decode_batch(cfg: ModelConfig, params, prompts,
                       n_tokens: int, dcfg: MCTSDecodeConfig, seed: int = 0,
                       mesh=None) -> List[List[int]]:
     """Decode B prompts together: each of the ``n_tokens`` steps is a single
     batched multi-root search over all requests.
 
-    ``prompts`` is [B, plen] int32 (equal lengths; pad upstream if needed —
-    per-request true lengths are supported via the engine path).  ``mesh``
-    as in ``make_batched_searcher``: None auto-shards the searched batch
-    over multiple devices, False forces single-device vmap.
+    ``prompts`` is [B, plen] int32 OR a ragged list of 1-D token sequences:
+    requests are padded to one buffer shape and their true lengths ride
+    along as ``LMDecodeDomain.prompt_len``, so mixed-length batches compile
+    to the same single program as equal-length ones.  ``mesh`` as in
+    ``make_batched_searcher``: None auto-shards the searched batch over
+    multiple devices, False forces single-device vmap.
     """
-    prompts = np.asarray(prompts, np.int32)
-    if prompts.ndim != 2:
-        raise ValueError(f"prompts must be [B, plen], got {prompts.shape}")
-    b, plen = prompts.shape
-    buf = np.zeros((b, plen + n_tokens), np.int32)
-    buf[:, :plen] = prompts
-    lens = np.full((b,), plen, np.int32)
+    buf, lens = _pad_prompts(prompts, n_tokens)
+    b = buf.shape[0]
     searcher = make_batched_searcher(cfg, params, dcfg, batch=b, mesh=mesh)
     rng = jax.random.key(seed)
     out: List[List[int]] = [[] for _ in range(b)]

@@ -51,6 +51,55 @@ def test_decode_attention(b, sk, h, hkv, d):
                                atol=2e-5, rtol=2e-5)
 
 
+# The shapes the cached MCTS decode path (models.transformer.step_fn via
+# CachedLMDecodeDomain, DESIGN.md §10) actually issues: non-power-of-two
+# cache rows sized prompt+depth+rollout, with per-row valid lengths
+# ``pos + 1`` anywhere from a 1-token prefix up to the full row.  The kernel
+# builds its compiler params through ``compat.tpu_compiler_params``, so these
+# cases pass on jax 0.4.37 and latest alike.
+@pytest.mark.parametrize("b,sk,h,hkv,d", [
+    (4, 28, 4, 2, 8),       # test-size row: plen 16 + depth 8 + rollout 4
+    (2, 44, 4, 2, 16),      # bench smoke row: plen 32 + depth 8 + rollout 4
+    (3, 27, 3, 1, 32),      # odd row length, MQA grouping
+])
+def test_decode_attention_cached_domain_shapes(b, sk, h, hkv, d):
+    from repro.kernels.decode_attention import ops as da
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    k = jax.random.normal(ks[1], (b, sk, hkv, d))
+    v = jax.random.normal(ks[2], (b, sk, hkv, d))
+    # ragged position offsets across the batch, pinning both extremes: the
+    # first post-prefill step (valid 1 would mean an empty prefix; the domain
+    # never goes below plen+1) and a row filled to capacity (valid == sk)
+    base = np.linspace(1, sk, b).astype(np.int32)
+    for vl in (jnp.asarray(base),
+               jnp.full((b,), 1, jnp.int32),
+               jnp.full((b,), sk, jnp.int32)):
+        o_ref = da.decode_attention(q, k, v, vl, use_ref=True)
+        o_ker = da.decode_attention(q, k, v, vl, interpret=True, blk_k=128)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_step_fn_issuance():
+    """End-to-end shape check: the kernel path agrees with the ref oracle on
+    the exact (q, cache, valid) stream a cached-domain rollout issues —
+    sequential single-token steps with growing position offsets."""
+    from repro.kernels.decode_attention import ops as da
+    b, sk, h, hkv, d = 2, 20, 2, 1, 16
+    ks = jax.random.split(jax.random.key(12), 3)
+    k = jax.random.normal(ks[1], (b, sk, hkv, d))
+    v = jax.random.normal(ks[2], (b, sk, hkv, d))
+    plen = np.array([3, 7], np.int32)
+    for step in range(4):                       # rollout_len=4 trajectory
+        q = jax.random.normal(jax.random.fold_in(ks[0], step), (b, 1, h, d))
+        vl = jnp.asarray(plen + 1 + step)       # valid = pos + 1
+        o_ref = da.decode_attention(q, k, v, vl, use_ref=True)
+        o_ker = da.decode_attention(q, k, v, vl, interpret=True, blk_k=128)
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # wkv6 (rwkv6 recurrence)
 # ---------------------------------------------------------------------------

@@ -33,9 +33,38 @@ def test_mcts_decode_batch_shapes(params):
     assert all(0 <= t < CFG.vocab_size for o in out for t in o)
 
 
+def test_mcts_decode_batch_ragged_prompts(params):
+    """Ragged prompt lists share one padded buffer; true lengths ride along
+    as prompt_len, and a padded copy of a request decodes identically."""
+    out = mcts_decode_batch(CFG, params, [[1, 2, 3], [4, 5], [6]], 2, DCFG)
+    assert len(out) == 3 and all(len(o) == 2 for o in out)
+    assert all(0 <= t < CFG.vocab_size for o in out for t in o)
+    solo = mcts_decode_batch(CFG, params, [[4, 5]], 2, DCFG)
+    assert solo[0] == out[1]
+
+
+def test_mcts_decode_batch_accepts_device_arrays(params):
+    """2-D jax arrays work exactly like the equivalent numpy prompts."""
+    import jax.numpy as jnp
+    p = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
+    assert (mcts_decode_batch(CFG, params, jnp.asarray(p), 2, DCFG)
+            == mcts_decode_batch(CFG, params, p, 2, DCFG))
+
+
 def test_mcts_decode_batch_rejects_flat_prompts(params):
     with pytest.raises(ValueError, match="B, plen"):
         mcts_decode_batch(CFG, params, np.array([1, 2, 3], np.int32), 1, DCFG)
+    with pytest.raises(ValueError, match="1-D"):
+        mcts_decode_batch(CFG, params, [1, 2, 3], 1, DCFG)
+
+
+def test_mcts_decode_batch_rejects_empty_prompts(params):
+    """Zero-length prompts have no next-token position — fail loudly rather
+    than emit garbage (cached and uncached would diverge silently)."""
+    with pytest.raises(ValueError, match="at least one token"):
+        mcts_decode_batch(CFG, params, [[1, 2, 3], []], 1, DCFG)
+    with pytest.raises(ValueError, match="at least one request"):
+        mcts_decode_batch(CFG, params, [], 1, DCFG)
 
 
 def test_engine_mcts_mode_drains_mixed_lengths(params):

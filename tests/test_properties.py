@@ -136,6 +136,92 @@ def test_int8_quantization_error_bound(seed):
 
 
 # ---------------------------------------------------------------------------
+# KV-cache invariants (cached MCTS decode, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+_LM = []
+
+
+def _lm():
+    """Tiny dense model, built once per session (hypothesis examples share it)."""
+    if not _LM:
+        from repro.models.base import ModelConfig, get_family
+        cfg = ModelConfig(name="prop", family="dense", n_layers=1, d_model=16,
+                          n_heads=2, n_kv_heads=1, d_ff=32, vocab_size=32,
+                          dtype="float32", ce_chunk=8, remat=False)
+        _LM.append((cfg, get_family(cfg).init(cfg, jax.random.key(0))))
+    return _LM[0]
+
+
+def _check_prefill_then_step_matches_full_forward(seed, plen, steps):
+    """Prefill at plen then incremental steps == full forward, position by
+    position — the core soundness invariant of the cached decode path."""
+    from repro.models.base import get_family, seq_prefill, seq_step
+    cfg, params = _lm()
+    rng = np.random.default_rng(seed)
+    total = plen + steps
+    toks = rng.integers(0, cfg.vocab_size, total).astype(np.int32)
+    full = get_family(cfg).logits_fn(cfg, params, jnp.asarray(toks)[None])[0]
+    # the padded buffer tail holds garbage the causal mask must hide
+    buf = np.concatenate([toks[:plen],
+                          rng.integers(0, cfg.vocab_size, steps + 2)])
+    logits, cache = seq_prefill(cfg, params, jnp.asarray(buf, jnp.int32),
+                                jnp.int32(plen))
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full[plen - 1], np.float32),
+                               atol=1e-4, rtol=1e-4)
+    for t in range(plen, total):
+        logits, cache = seq_step(cfg, params, cache, jnp.int32(toks[t]),
+                                 jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[t], np.float32),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), plen=st.integers(1, 6),
+       steps=st.integers(0, 4))
+def test_prefill_then_step_matches_full_forward(seed, plen, steps):
+    _check_prefill_then_step_matches_full_forward(seed, plen, steps)
+
+
+def _check_cache_reset_leaks_nothing(seed, plen):
+    """A slot's reset (buffer zeroed, cache re-prefilled) must leave nothing
+    of the previous occupant observable: logits are invariant to (a) what the
+    padded buffer tail held before the new prompt and (b) stale K/V rows
+    past the valid position — both stand in for 'request A's leftovers'."""
+    from repro.models.base import seq_prefill, seq_step
+    cfg, params = _lm()
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    pad = 4
+    clean = np.zeros(plen + pad, np.int32)
+    clean[:plen] = prompt
+    dirty = rng.integers(0, cfg.vocab_size, plen + pad).astype(np.int32)
+    dirty[:plen] = prompt
+    lg_c, cache_c = seq_prefill(cfg, params, jnp.asarray(clean), jnp.int32(plen))
+    lg_d, cache_d = seq_prefill(cfg, params, jnp.asarray(dirty), jnp.int32(plen))
+    np.testing.assert_allclose(np.asarray(lg_d), np.asarray(lg_c),
+                               atol=1e-5, rtol=1e-5)
+    # scribble over the cache rows a previous request would have left beyond
+    # the valid prefix: the next step's valid-length mask must hide them
+    noise = jnp.asarray(rng.normal(size=np.shape(cache_c["k"])), jnp.float32)
+    stale = jnp.arange(cache_c["k"].shape[1])[None, :, None, None] > plen
+    cache_s = {kk: jnp.where(stale, vv + noise.astype(vv.dtype), vv)
+               for kk, vv in cache_c.items()}
+    tok = jnp.int32(int(rng.integers(0, cfg.vocab_size)))
+    lg1, _ = seq_step(cfg, params, cache_c, tok, jnp.int32(plen))
+    lg2, _ = seq_step(cfg, params, cache_s, tok, jnp.int32(plen))
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(lg1),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), plen=st.integers(1, 6))
+def test_cache_reset_leaks_nothing(seed, plen):
+    _check_cache_reset_leaks_nothing(seed, plen)
+
+
+# ---------------------------------------------------------------------------
 # data pipeline determinism
 # ---------------------------------------------------------------------------
 @given(st.integers(0, 1000), st.integers(0, 5))
