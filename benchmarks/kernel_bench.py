@@ -75,3 +75,17 @@ def run(report, smoke: bool = False):
     us = _t(jax.jit(lambda *a: uo.uct_argmax(*a, cp=1.4, use_ref=True)),
             n, w2, vl2, pn)
     report(f"uct_argmax_ref_{n_nodes}x64", us, "fused score+argmax, lane-padded 128")
+
+    # lockstep wave shapes (DESIGN.md §11): r = lanes rows per launch, rows
+    # duplicating a shared parent (co-located lanes), ragged valid masks
+    for lanes in ((8,) if smoke else (8, 16, 32)):
+        rows = jnp.arange(lanes) % 3
+        nw = n[:3][rows]
+        ww = w2[:3][rows]
+        vlw = jax.random.randint(ks[2], (lanes, 64), 0, 3).astype(jnp.float32)
+        pnw = nw.sum(-1) + 1
+        va = jax.random.bernoulli(ks[2], 0.7, (lanes, 64)).at[:, 0].set(True)
+        us = _t(jax.jit(lambda *a: uo.uct_argmax(
+            *a, cp=1.4, valid=va, use_ref=True)), nw, ww, vlw, pnw)
+        report(f"uct_argmax_wave_ref_r{lanes}", us,
+               f"jnp oracle at the wave shape [{lanes},128], dup parents")

@@ -2,16 +2,27 @@
 reach a target strength, from strength-vs-budget curves; plus the direct
 in-flight duplicate-rate signal vs concurrency.  All strategies go through
 the unified ``repro.search`` API.
+
+Also home of the lockstep-vs-scan Select rows (DESIGN.md §11):
+
+* ``select_wave_{scan,lockstep}_lanesL`` — Select-stage throughput in
+  isolation (one wave = L trajectory selections on a grown tree; the
+  lockstep row's ``derived`` carries the speedup CI asserts on).
+* ``select_e2e_tree_lanesL`` — end-to-end playouts/s of the tree strategy
+  under both modes (playout-dominated on CPU, so noisier; informational).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import stages as S
 from repro.core.domains.pgame import PGameDomain, optimal_root_action
 from repro.core.metrics import search_overhead, strength
-from repro.search import SearchConfig, SearchParams, search
+from repro.search import SearchConfig, SearchParams, search, search_batch
 
 DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=11)
 SP = SearchParams(cp=0.7, max_depth=6)
@@ -31,9 +42,66 @@ def _curve(method, lanes, budgets, seeds):
     return curve
 
 
+def _select_stage_us(ws: str, lanes: int, tree, n_waves: int = 100) -> float:
+    """Mean microseconds per Select wave (L selections) on a fixed tree."""
+    sp = dataclasses.replace(SP, wave_select=ws)
+
+    def body(i, acc):
+        t2 = dict(tree)
+        # per-iteration perturbation defeats loop-invariant hoisting
+        t2["visits"] = tree["visits"].at[0].add(i)
+        t3, sel = S.select_wave(t2, sp, lanes, jnp.asarray(True))
+        return acc + sel["leaf"].sum() + t3["vloss"].sum()
+
+    fn = jax.jit(lambda: jax.lax.fori_loop(0, n_waves, body, jnp.int32(0)))
+    fn().block_until_ready()
+    best = float("inf")
+    for _ in range(5):                # min-of-repeats rides out CPU jitter
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best / n_waves * 1e6
+
+
+def _e2e_playouts_per_s(ws: str, lanes: int, budget: int, nbatch: int) -> float:
+    sp = dataclasses.replace(SP, wave_select=ws)
+    cfg = SearchConfig(method="tree", budget=budget, lanes=lanes, params=sp,
+                       keep_tree=False)
+    fn = jax.jit(
+        lambda r: search_batch([DOM] * nbatch, cfg, r, mesh=False).action_visits)
+    fn(jax.random.key(0)).block_until_ready()
+    iters = 3
+    t0 = time.perf_counter()
+    for i in range(iters):
+        fn(jax.random.key(i)).block_until_ready()
+    return nbatch * budget / ((time.perf_counter() - t0) / iters)
+
+
+def _fused_select_rows(report, smoke: bool):
+    # a representative mid-search tree: grown by the scan path so both modes
+    # descend the identical structure
+    grow = SearchConfig(method="tree", budget=256, lanes=8, params=SP)
+    tree = jax.jit(lambda r: search(DOM, grow, r))(jax.random.key(0)).tree
+    for lanes in ((8,) if smoke else (8, 16, 32)):
+        us_scan = _select_stage_us("scan", lanes, tree)
+        us_lock = _select_stage_us("lockstep", lanes, tree)
+        report(f"select_wave_scan_lanes{lanes}", us_scan,
+               f"selects/s={lanes / us_scan * 1e6:.0f}")
+        report(f"select_wave_lockstep_lanes{lanes}", us_lock,
+               f"selects/s={lanes / us_lock * 1e6:.0f} "
+               f"speedup={us_scan / us_lock:.2f}x one [lanes,A] UCT pass/level")
+    lanes, budget, nbatch = 8, 256, (4 if smoke else 8)
+    ps_scan = _e2e_playouts_per_s("scan", lanes, budget, nbatch)
+    ps_lock = _e2e_playouts_per_s("lockstep", lanes, budget, nbatch)
+    report(f"select_e2e_tree_lanes{lanes}", 1e6 * budget * nbatch / ps_lock,
+           f"lockstep={ps_lock:.0f}pl/s scan={ps_scan:.0f}pl/s "
+           f"speedup={ps_lock / ps_scan:.2f}x")
+
+
 def run(report, smoke: bool = False):
     budgets = (16, 32) if smoke else BUDGETS
     seeds = 3 if smoke else SEEDS
+    _fused_select_rows(report, smoke)
     t0 = time.perf_counter()
     seq = _curve("sequential", 1, budgets, seeds)
     report("seq_strength_curve", (time.perf_counter() - t0) * 1e6,

@@ -5,10 +5,20 @@ S→E→P→B inside one trajectory and soft ILD between trajectories.  Each sta
 here is a pure function (tree, inputs) -> (tree, outputs) so the pipeline
 scheduler can compose them over in-flight waves.
 
-Serial stages (S, E, B) process a wave's lanes sequentially (scan) — matching
-the paper's serial pipeline stages, and letting virtual loss decorrelate lanes
-within a wave.  The Playout stage is fully parallel (vmap) — the paper's
-replicated playout stage (Fig. 5).
+Serial stages (E, B) process a wave's lanes sequentially (scan) — matching
+the paper's serial pipeline stages.  The Playout stage is fully parallel
+(vmap) — the paper's replicated playout stage (Fig. 5).
+
+The Select stage has two implementations behind one dispatcher
+(``select_wave``, knob ``SearchParams.wave_select`` — DESIGN.md §11):
+
+* ``"scan"``     — lane-major: lane i+1 descends after lane i, seeing its
+  virtual loss at every level (the original serial Select stage).
+* ``"lockstep"`` — depth-major: all lanes descend together, one batched
+  ``[lanes, A]`` UCT argmax per tree level (a single Pallas
+  ``uct_argmax_tiles`` launch with ``r = lanes`` when ``use_pallas``),
+  virtual loss applied per level so deeper levels see the whole wave's
+  in-flight counts.  At ``lanes == 1`` the two are bit-for-bit identical.
 """
 from __future__ import annotations
 
@@ -22,6 +32,9 @@ from repro.core import uct
 from repro.core.tree import ROOT, UNEXPANDED, Tree, get_state, max_nodes
 
 
+WAVE_SELECT_MODES = ("auto", "scan", "lockstep")
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchParams:
     cp: float = 1.414
@@ -29,10 +42,26 @@ class SearchParams:
     max_depth: int = 32
     puct: bool = False
     use_pallas: bool = False
+    # Select-stage iteration order (DESIGN.md §11): "scan" descends lanes one
+    # after another (lane-major), "lockstep" descends all lanes together with
+    # one batched UCT pass per tree level (depth-major).  "auto" resolves to
+    # "lockstep" when ``use_pallas`` (the batched kernel launch is the point)
+    # and to "scan" otherwise, preserving the historical default.
+    wave_select: str = "auto"
 
     @property
     def path_len(self) -> int:
         return self.max_depth + 2          # root .. deepest leaf + expanded child
+
+    @property
+    def resolved_wave_select(self) -> str:
+        if self.wave_select not in WAVE_SELECT_MODES:
+            raise ValueError(
+                f"wave_select must be one of {WAVE_SELECT_MODES}, "
+                f"got {self.wave_select!r}")
+        if self.wave_select == "auto":
+            return "lockstep" if self.use_pallas else "scan"
+        return self.wave_select
 
 
 def empty_selection(sp: SearchParams, lanes: int):
@@ -103,8 +132,8 @@ def select_one(tree: Tree, sp: SearchParams, valid):
     return tree, sel
 
 
-def select_wave(tree: Tree, sp: SearchParams, lanes: int, valid):
-    """Serial over lanes: lane i+1 sees lane i's virtual loss (paper Fig. 5:
+def select_wave_scan(tree: Tree, sp: SearchParams, lanes: int, valid):
+    """Lane-major Select: lane i+1 sees lane i's virtual loss (paper Fig. 5:
     one serial Select stage feeding multiple playout stages)."""
     def body(tr, _):
         tr, sel = select_one(tr, sp, valid)
@@ -112,6 +141,83 @@ def select_wave(tree: Tree, sp: SearchParams, lanes: int, valid):
 
     tree, sels = jax.lax.scan(body, tree, None, length=lanes)
     return tree, sels
+
+
+def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
+    """Depth-major lockstep Select (DESIGN.md §11): every loop iteration is
+    one tree level, scoring all active lanes' children with a single batched
+    ``[lanes, A]`` UCT argmax — one ``uct_argmax_tiles`` launch with
+    ``r = lanes`` when ``use_pallas``, instead of ``lanes`` single-row calls
+    per level.
+
+    Virtual loss is applied per level: every selected child gets +1 before
+    the next level's scores are computed, so deeper levels see the whole
+    wave's in-flight counts (tree-parallel decorrelation, WU-UCT style),
+    while lanes at the SAME level pick independently.  A lane's own VL on
+    its current node is excluded from ``parent_n``, which makes the descent
+    bit-for-bit identical to ``select_wave_scan`` at ``lanes == 1``.
+    Finished/invalid lanes mask out via the argmax's ``valid`` lanes.
+    """
+    valid = jnp.broadcast_to(jnp.asarray(valid, bool), (lanes,))
+    nmax = max_nodes(tree)
+    rows = jnp.arange(lanes)
+    vloss_pre = tree["vloss"]          # in-flight counts before this wave
+
+    def lane_active(node, depth):
+        fully = (tree["children"][node] >= 0).all(axis=-1)
+        return fully & ~tree["terminal"][node] & (depth < sp.max_depth)
+
+    # root VL up front: the root is on every valid lane's path
+    vloss0 = tree["vloss"].at[ROOT].add(valid.sum().astype(jnp.int32))
+    node0 = jnp.full((lanes,), ROOT, jnp.int32)
+    depth0 = jnp.zeros((lanes,), jnp.int32)
+    path0 = jnp.full((lanes, sp.path_len), UNEXPANDED, jnp.int32) \
+        .at[:, 0].set(ROOT)
+    active0 = valid & lane_active(node0, depth0)
+
+    def cond(c):
+        return c[4].any()
+
+    def body(c):
+        vloss, node, depth, path, active = c
+        ch = tree["children"][node]                        # [lanes, A]
+        idx = jnp.maximum(ch, 0)
+        own = active.astype(jnp.int32)                     # own in-flight VL
+        pn = tree["visits"][node] + vloss[node] - own
+        a = uct.uct_argmax(
+            tree["visits"][idx], tree["value"][idx], vloss[idx],
+            pn, sp.cp, vl_weight=sp.vl_weight, prior=tree["prior"][node],
+            puct=sp.puct, valid=(ch >= 0) & active[:, None],
+            use_pallas=sp.use_pallas)
+        nxt = ch[rows, a]
+        col = jnp.where(active, depth + 1, sp.path_len)    # OOB -> dropped
+        path = path.at[rows, col].set(nxt, mode="drop")
+        vloss = vloss.at[jnp.where(active, nxt, nmax)].add(1, mode="drop")
+        node = jnp.where(active, nxt, node)
+        depth = depth + own
+        active = active & lane_active(node, depth)
+        return vloss, node, depth, path, active
+
+    vloss, leaf, depth, path, _ = jax.lax.while_loop(
+        cond, body, (vloss0, node0, depth0, path0, active0))
+    tree = dict(tree)
+    tree["vloss"] = vloss
+    # same meaning as the scan path's dup: the lane's leaf was already
+    # in-flight when it arrived — from an earlier unfinished wave, or from a
+    # lower-numbered lane of this wave (lockstep lanes at a shared node make
+    # identical picks; the Expand stage then assigns them distinct siblings)
+    shared = jnp.tril(leaf[:, None] == leaf[None, :], k=-1).any(axis=1)
+    dup = ((vloss_pre[leaf] > 0) | shared) & valid
+    sel = {"path": jnp.where(valid[:, None], path, UNEXPANDED),
+           "leaf": leaf, "depth": depth, "valid": valid, "dup": dup}
+    return tree, sel
+
+
+def select_wave(tree: Tree, sp: SearchParams, lanes: int, valid):
+    """Dispatch on ``sp.resolved_wave_select`` (static at trace time)."""
+    if sp.resolved_wave_select == "lockstep":
+        return select_wave_fused(tree, sp, lanes, valid)
+    return select_wave_scan(tree, sp, lanes, valid)
 
 
 # ---------------------------------------------------------------------------

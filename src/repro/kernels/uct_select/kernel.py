@@ -4,6 +4,12 @@ The Select stage's hot op (paper eq. 1): for a batch of R tree nodes with A
 children each, compute UCT scores with virtual loss and return the best child
 index per node — fused in VMEM, no [R, A] score array round-trip through HBM.
 Action width is lane-padded to 128 by the ops layer.
+
+R is the wave axis: the lockstep Select stage (DESIGN.md §11) issues ONE
+launch per tree level with R = lanes, so a whole wave's children score in a
+single [R, 128·k] VMEM tile instead of R single-row launches.  Rows may
+duplicate a parent (co-located lanes) and rows whose ``valid`` mask is all
+zero (finished lanes) argmax over -inf to index 0, which callers discard.
 """
 from __future__ import annotations
 

@@ -1,4 +1,13 @@
-"""jit'd wrapper for fused UCT argmax. Accepts [..., A] stats, pads A->128."""
+"""jit'd wrapper for fused UCT argmax. Accepts [..., A] stats, pads A->128.
+
+Row batching is the wave contract (DESIGN.md §11): the lockstep Select stage
+calls this once per tree level with ``r = lanes`` rows — rows may repeat the
+same parent's stats (co-located lanes), carry ragged ``valid`` masks, or be
+entirely invalid (finished lanes).  An all-invalid row deterministically
+returns index 0 (every score is -inf; callers discard masked lanes), and
+``blk_r`` is rounded up to the 8-row sublane multiple so wave-sized row
+counts (8, 12, 16, ...) tile cleanly on TPU.
+"""
 from __future__ import annotations
 
 import jax
@@ -32,7 +41,7 @@ def uct_argmax(child_n, child_w, child_vl, parent_n, *, vl_weight=1.0,
     if pad_a:
         z = lambda x, fill: jnp.pad(x, ((0, 0), (0, pad_a)), constant_values=fill)
         n2, w2, v2, va = z(n2, 1), z(w2, 0), z(v2, 0), z(va, 0)
-    blk_r = min(256, max(8, r))
+    blk_r = min(256, max(8, r + (-r) % 8))     # sublane-aligned row tile
     pad_r = (-r) % blk_r
     if pad_r:
         zr = lambda x: jnp.pad(x, ((0, pad_r), (0, 0)), constant_values=1)

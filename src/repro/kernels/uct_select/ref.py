@@ -1,4 +1,8 @@
-"""Oracle for the fused UCT argmax — delegates to repro.core.uct scoring."""
+"""Oracle for the fused UCT argmax — delegates to repro.core.uct scoring.
+
+Shares the kernel's wave contract: rows are independent (lanes), duplicated
+parents are fine, and an all-invalid row returns index 0 (argmax over -inf).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp

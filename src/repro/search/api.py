@@ -33,6 +33,12 @@ from repro.core.stages import SearchParams
 from repro.core.tree import Tree, root_child_stats
 from repro.search.domain import Domain, missing_members
 
+__all__ = [
+    "STATS_KEYS", "SearchConfig", "SearchResult", "StrategyFn",
+    "register_strategy", "get_strategy", "list_strategies",
+    "make_stats", "result_from_tree", "search", "search_batch",
+]
+
 # Every strategy returns exactly this stats key set (ISSUE: "identical
 # across all five").  ``playouts`` is the headline number and always equals
 # ``playouts_completed``; ``playouts_requested`` is the nominal budget after

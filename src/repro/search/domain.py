@@ -39,6 +39,8 @@ from typing import Any, List, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+__all__ = ["Domain", "SupportsPriors", "check_domain", "missing_members"]
+
 
 @runtime_checkable
 class Domain(Protocol):

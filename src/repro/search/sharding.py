@@ -27,6 +27,8 @@ import jax.numpy as jnp
 
 from repro.parallel.compat import batch_sharding, mesh_num_devices
 
+__all__ = ["shard_search_batch"]
+
 
 def _default_mesh():
     from repro.launch.mesh import make_search_mesh

@@ -17,6 +17,11 @@ Paper mapping (§IV baselines + §V contribution):
   leaf       — one trajectory, ``lanes`` parallel playouts from its leaf
   tree       — shared tree + virtual loss, ``lanes`` trajectories per round
   pipeline   — the paper's software-pipelined MCTS (linear/nonlinear)
+
+``tree`` and ``pipeline`` waves select through ``core.stages.select_wave``,
+so ``SearchParams.wave_select`` switches their Select stage between the
+lane-major scan and the depth-major lockstep path (one batched UCT pass per
+tree level — DESIGN.md §11) without touching this module.
 """
 from __future__ import annotations
 
@@ -27,6 +32,9 @@ from repro.core import stages as S
 from repro.core.tree import init_tree, root_child_stats
 from repro.search.api import (SearchConfig, SearchResult, make_stats,
                               register_strategy, result_from_tree)
+
+__all__ = ["PIPE_STAGES", "sequential", "root", "leaf", "tree_parallel",
+           "pipeline"]
 
 PIPE_STAGES = 4          # S, E, P, B
 

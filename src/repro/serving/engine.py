@@ -18,7 +18,9 @@ Two per-slot decode modes (EngineConfig.decode):
   (``MCTSDecodeConfig.cached``): inside that program each slot gets its own
   cache row, prefilled once per search and shared by every playout of that
   root; with ``EngineConfig.mesh`` the rows shard along the slot axis like
-  the prefix buffer (DESIGN.md §10).
+  the prefix buffer (DESIGN.md §10).  The searches' Select-stage iteration
+  order follows ``MCTSDecodeConfig.wave_select`` (lockstep = one batched
+  UCT pass per tree level; DESIGN.md §11).
 """
 from __future__ import annotations
 

@@ -24,6 +24,10 @@ per-slot cache rows live inside the per-token program, batch-sharded along
 the slot axis exactly like ``buf``/``lens`` under a mesh (DESIGN.md §10).
 Prompts may be ragged — they share one padded buffer shape with true
 lengths riding along as ``prompt_len``.
+
+``MCTSDecodeConfig.wave_select`` picks the Select-stage iteration order of
+every per-token search (lockstep = one batched UCT pass per tree level,
+scan = lane-major; DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -56,13 +60,18 @@ class MCTSDecodeConfig:
     # CachedLMDecodeDomain.  False restores the uncached domain (the parity
     # oracle, and a fallback for debugging numerics).
     cached: bool = True
+    # Select-stage iteration order inside each per-token search (DESIGN.md
+    # §11): "lockstep" descends all of a wave's lanes together with one
+    # batched UCT pass per tree level; "scan" is the lane-major original;
+    # "auto" follows SearchParams' resolution (lockstep iff use_pallas).
+    wave_select: str = "auto"
 
     def search_config(self) -> SearchConfig:
         return SearchConfig(
             method=self.method, budget=self.budget, lanes=self.lanes,
             keep_tree=False,
             params=SearchParams(cp=self.cp, max_depth=self.search_depth,
-                                puct=True))
+                                puct=True, wave_select=self.wave_select))
 
 
 def _domain(cfg: ModelConfig, params, prompt, dcfg: MCTSDecodeConfig,

@@ -193,6 +193,56 @@ def test_uct_argmax_kernel(r, a):
     assert bool((a1 == a2).all())
 
 
+# The row shapes the lockstep Select stage issues (DESIGN.md §11): one
+# [lanes, A] launch per tree level, where many rows repeat the SAME parent's
+# child stats (co-located lanes), ``valid`` is ragged across rows, and
+# finished lanes contribute all-invalid rows.
+@pytest.mark.parametrize("lanes,a", [(8, 4), (12, 4), (16, 8), (32, 130)])
+def test_uct_argmax_kernel_wave_duplicated_parents(lanes, a):
+    from repro.kernels.uct_select import ops as uo
+    ks = jax.random.split(jax.random.key(13), 4)
+    # 3 distinct parents, each duplicated over ceil(lanes/3) co-located lanes
+    parents_n = jax.random.randint(ks[0], (3, a), 0, 50).astype(jnp.float32)
+    parents_w = jax.random.normal(ks[1], (3, a)) * 3
+    rows = jnp.arange(lanes) % 3
+    n, w = parents_n[rows], parents_w[rows]
+    vl = jax.random.randint(ks[2], (lanes, a), 0, 3).astype(jnp.float32)
+    pn = n.sum(-1) + 1
+    valid = jax.random.bernoulli(ks[3], 0.7, (lanes, a)).at[:, 0].set(True)
+    a1 = uo.uct_argmax(n, w, vl, pn, cp=1.4, valid=valid, use_ref=True)
+    a2 = uo.uct_argmax(n, w, vl, pn, cp=1.4, valid=valid, interpret=True)
+    assert bool((a1 == a2).all())
+    # identical rows with identical masks pick identical children
+    same = np.asarray(rows[:, None] == rows[None, :])
+    eq_mask = np.asarray((valid[:, None, :] == valid[None, :, :]).all(-1))
+    eq_vl = np.asarray((vl[:, None, :] == vl[None, :, :]).all(-1))
+    out = np.asarray(a2)
+    ii, jj = np.nonzero(same & eq_mask & eq_vl)
+    assert (out[ii] == out[jj]).all()
+
+
+def test_uct_argmax_kernel_wave_finished_lanes():
+    """All-invalid rows (finished/masked lanes) return 0 on both paths, and
+    an entirely-finished wave — the all-lanes-done edge — is well defined."""
+    from repro.kernels.uct_select import ops as uo
+    lanes, a = 8, 4
+    ks = jax.random.split(jax.random.key(14), 3)
+    n = jax.random.randint(ks[0], (lanes, a), 0, 9).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (lanes, a))
+    vl = jnp.zeros((lanes, a))
+    pn = n.sum(-1) + 1
+    half = jnp.arange(lanes)[:, None] < 4        # lanes 4.. are finished
+    valid = jnp.broadcast_to(half, (lanes, a))
+    a1 = uo.uct_argmax(n, w, vl, pn, cp=1.4, valid=valid, use_ref=True)
+    a2 = uo.uct_argmax(n, w, vl, pn, cp=1.4, valid=valid, interpret=True)
+    assert bool((a1 == a2).all())
+    assert bool((a2[4:] == 0).all())
+    none = jnp.zeros((lanes, a), bool)
+    z1 = uo.uct_argmax(n, w, vl, pn, cp=1.4, valid=none, use_ref=True)
+    z2 = uo.uct_argmax(n, w, vl, pn, cp=1.4, valid=none, interpret=True)
+    assert bool((z1 == 0).all()) and bool((z2 == 0).all())
+
+
 # ---------------------------------------------------------------------------
 # flash backward (custom VJP) vs autodiff-through-sdpa
 # ---------------------------------------------------------------------------

@@ -1,0 +1,63 @@
+"""Execute every fenced ```python block in README.md — the CI docs job.
+
+Each block runs in its own namespace with assertions live, so a quickstart
+snippet that drifts from the real API fails the build instead of rotting.
+Blocks whose info string is anything other than ``python`` (bash, text, …)
+are skipped.  Usage:
+
+    PYTHONPATH=src python tools/run_readme_blocks.py [README.md ...]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_python_blocks(text: str):
+    """Yield (start_line, source) for each ```python fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m:
+            lang, start = m.group(1), i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not FENCE.match(lines[i]):
+                body.append(lines[i])
+                i += 1
+            if i >= len(lines):
+                raise SystemExit(f"unclosed code fence at line {start}")
+            if lang == "python":
+                yield start + 1, "\n".join(body)
+        i += 1
+
+
+def main(paths) -> int:
+    failures = 0
+    for path in paths:
+        text = pathlib.Path(path).read_text()
+        blocks = list(extract_python_blocks(text))
+        if not blocks:
+            print(f"{path}: no python blocks found", file=sys.stderr)
+            failures += 1
+            continue
+        for lineno, src in blocks:
+            label = f"{path}:{lineno}"
+            try:
+                code = compile(src, label, "exec")
+                exec(code, {"__name__": f"readme_block_{lineno}"})
+                print(f"ok   {label}")
+            except Exception as e:  # noqa: BLE001 — report and keep going
+                failures += 1
+                print(f"FAIL {label}: {type(e).__name__}: {e}",
+                      file=sys.stderr)
+    return failures
+
+
+if __name__ == "__main__":
+    files = sys.argv[1:] or ["README.md"]
+    raise SystemExit(1 if main(files) else 0)
