@@ -24,6 +24,7 @@ MODULES = [
     "strength_speedup",      # §II def. 2 + §IV baselines
     "search_overhead",       # §III-B
     "mcts_decode_bench",     # modern instantiation (NN playouts)
+    "serving_bench",         # request lifecycle: cold vs KV-splice+reuse
     "shard_scaling",         # batch axis over a device mesh (DESIGN.md §9)
     "straggler_bench",       # runtime policy
     "kernel_bench",          # per-kernel micro numbers

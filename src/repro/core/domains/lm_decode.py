@@ -46,6 +46,11 @@ class LMDecodeDomain:
                                       # None -> prompt.shape[0].  Lets batched
                                       # serving share one padded buffer shape
                                       # across requests of different lengths.
+    root_warm: Any = None             # optional RootCarry (core.tree): seeds
+                                      # the search root's N/W/prior from the
+                                      # previous token's rerooted subtree
+                                      # (cross-token reuse, DESIGN.md §12).
+                                      # None searches cold.
 
     def __post_init__(self):
         object.__setattr__(self, "_fam", get_family(self.cfg))
@@ -120,9 +125,24 @@ class CachedLMDecodeDomain(LMDecodeDomain):
     Memory note: every tree node (and pipeline buffer lane) carries a full
     cache copy ``[L, max_len, Hkv, D]`` — the classic KV-cache trade of
     memory for compute, scaled here by tree capacity (DESIGN.md §10).
+
+    Commit-time KV splice (DESIGN.md §12): when ``root_cache``/``root_logits``
+    are set, ``root_state`` returns them verbatim instead of prefilling —
+    the serving searcher advances the previous token's root row by one
+    ``seq_step`` at commit time and splices it back in, so a request's
+    prompt is prefilled once per *lifetime* instead of once per token.
     """
 
+    root_cache: Any = None            # optional spliced root KV cache (must
+                                      # match seq_prefill's layout at
+                                      # max_len); None prefills the prompt
+    root_logits: Any = None           # next-token logits paired with
+                                      # root_cache
+
     def root_state(self):
+        if self.root_cache is not None:
+            return {"len": self._plen(), "cache": self.root_cache,
+                    "logits": self.root_logits}
         toks = jnp.zeros((self.max_len,), jnp.int32)
         toks = jax.lax.dynamic_update_slice(toks, self.prompt.astype(jnp.int32), (0,))
         logits, cache = seq_prefill(self.cfg, self.params, toks, self._plen())

@@ -36,7 +36,7 @@ def init_tree(domain, max_nodes: int) -> Tree:
     state = jax.tree_util.tree_map(
         lambda x: jnp.zeros((max_nodes,) + jnp.shape(x), jnp.asarray(x).dtype)
         .at[ROOT].set(x), root_state)
-    return {
+    tree = {
         "visits": jnp.zeros((max_nodes,), jnp.int32),
         "value": jnp.zeros((max_nodes,), jnp.float32),
         "vloss": jnp.zeros((max_nodes,), jnp.int32),
@@ -49,6 +49,69 @@ def init_tree(domain, max_nodes: int) -> Tree:
         "state": state,
         "next_free": jnp.asarray(1, jnp.int32),
     }
+    warm = getattr(domain, "root_warm", None)
+    if warm is not None:
+        tree = warm_start_root(tree, warm)
+    return tree
+
+
+def empty_root_carry(num_actions: int) -> Dict[str, Any]:
+    """The identity ``RootCarry``: warm-starting with it is bit-for-bit a
+    cold search (zero visits, uniform prior — exactly ``init_tree``'s
+    defaults), so freshly admitted serving slots just reset to this."""
+    a = num_actions
+    return {
+        "visits": jnp.asarray(0, jnp.int32),
+        "value": jnp.asarray(0.0, jnp.float32),
+        "prior": jnp.full((a,), 1.0 / a, jnp.float32),
+        "child_visits": jnp.zeros((a,), jnp.int32),
+        "child_value": jnp.zeros((a,), jnp.float32),
+    }
+
+
+def reroot(tree: Tree, action) -> Dict[str, Any]:
+    """Compact the subtree under root child ``action`` into a ``RootCarry``
+    (DESIGN.md §12): the chosen child's N/W, its stored prior row, and its
+    children's N/W.  After committing the child's token this is exactly the
+    statistic set of the next search's root — carried across tokens as a
+    warm start instead of searching cold.  Unvisited slots fall back to the
+    identity carry (uniform prior, zero counts), so rerooting onto an
+    unexpanded child degrades gracefully to cold."""
+    a = num_actions(tree)
+    c = tree["children"][ROOT][action]
+    has = c >= 0
+    ci = jnp.maximum(c, 0)
+    gch = tree["children"][ci]                       # grandchildren [A]
+    gvalid = (gch >= 0) & has
+    gi = jnp.maximum(gch, 0)
+    return {
+        "visits": jnp.where(has, tree["visits"][ci], 0).astype(jnp.int32),
+        "value": jnp.where(has, tree["value"][ci], 0.0).astype(jnp.float32),
+        "prior": jnp.where(has, tree["prior"][ci],
+                           jnp.full((a,), 1.0 / a, jnp.float32)),
+        "child_visits": jnp.where(gvalid, tree["visits"][gi],
+                                  0).astype(jnp.int32),
+        "child_value": jnp.where(gvalid, tree["value"][gi],
+                                 0.0).astype(jnp.float32),
+    }
+
+
+def warm_start_root(tree: Tree, carry: Dict[str, Any]) -> Tree:
+    """Seed a fresh tree's root from a ``RootCarry`` (cross-token subtree
+    reuse, DESIGN.md §12): root N/W start at the carried child's counts and
+    the root prior blends the carried prior with the carried grandchild
+    visit distribution — previously explored continuations start favoured
+    (PUCT) instead of uniform.  ``warm_start_root(t, empty_root_carry(A))``
+    is bit-for-bit the identity: ``(prior + 0) / (1 + 0) == prior``."""
+    cv = carry["child_visits"].astype(jnp.float32)
+    prior = (carry["prior"] + cv) / (1.0 + cv.sum())
+    tree = dict(tree)
+    tree["visits"] = tree["visits"].at[ROOT].set(
+        carry["visits"].astype(jnp.int32))
+    tree["value"] = tree["value"].at[ROOT].set(
+        carry["value"].astype(jnp.float32))
+    tree["prior"] = tree["prior"].at[ROOT].set(prior)
+    return tree
 
 
 def max_nodes(tree: Tree) -> int:

@@ -63,11 +63,13 @@ def main() -> None:
                            max_new_tokens=args.max_new))
     out = eng.run_until_drained()
     dt = time.time() - t0
-    lat = [r.finish_t - r.enqueue_t for r in
-           [s for s in eng.slots if s is not None]]
     print(f"served {args.requests} requests, {out['tokens']} tokens "
           f"in {dt:.1f}s ({out['tokens']/dt:,.1f} tok/s, "
           f"{out['steps']} engine steps)")
+    print(f"latency p50={out['latency_p50']:.3f}s "
+          f"p95={out['latency_p95']:.3f}s")
+    for k, v in sorted(out["stats"].items()):
+        print(f"  {k}={v:.4g}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,7 @@
-from repro.serving.engine import EngineConfig, Request, ServingEngine  # noqa: F401
+from repro.serving.engine import EngineConfig, ServingEngine  # noqa: F401
 from repro.serving.mcts_decode import (MCTSDecodeConfig,  # noqa: F401
-                                       make_batched_searcher, mcts_decode,
-                                       mcts_decode_batch)
+                                       ReusableSearcher, make_batched_searcher,
+                                       mcts_decode, mcts_decode_batch)
+from repro.serving.scheduler import (POLICIES, Admit, Evict,  # noqa: F401
+                                     Request, RequestScheduler)
+from repro.serving.stats import ServingStats, percentile  # noqa: F401

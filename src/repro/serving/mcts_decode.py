@@ -25,6 +25,22 @@ the slot axis exactly like ``buf``/``lens`` under a mesh (DESIGN.md §10).
 Prompts may be ragged — they share one padded buffer shape with true
 lengths riding along as ``prompt_len``.
 
+Cross-token amortization (DESIGN.md §12) — the request-lifecycle rungs:
+
+* ``kv_splice=True`` — commit-time KV splice: the searcher keeps each
+  slot's root KV row + next-token logits in a carry, advances them by one
+  ``seq_step`` when the token commits, and splices them into the next
+  token's search root.  The prompt is prefilled once per request lifetime
+  (at slot admission) instead of once per token.
+* ``tree_reuse=True`` — cross-token subtree reuse: after committing a
+  token the per-slot tree is rerooted on the chosen child
+  (``core.tree.reroot``) and its N/W/children statistics seed the next
+  search's root as warm-start priors instead of starting cold.
+
+Either knob makes ``make_batched_searcher`` return a ``ReusableSearcher``
+(explicit per-slot carry threaded through ``step``); with both off it
+returns the stateless per-token function unchanged.
+
 ``MCTSDecodeConfig.wave_select`` picks the Select-stage iteration order of
 every per-token search (lockstep = one batched UCT pass per tree level,
 scan = lane-major; DESIGN.md §11).
@@ -39,7 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.domains.lm_decode import CachedLMDecodeDomain, LMDecodeDomain
-from repro.models.base import ModelConfig
+from repro.core.tree import empty_root_carry, reroot
+from repro.models.base import ModelConfig, seq_prefill, seq_step
 from repro.parallel.compat import (batch_sharding, mesh_num_devices,
                                    replicated_sharding)
 from repro.search import SearchConfig, SearchParams, search_batch
@@ -60,28 +77,54 @@ class MCTSDecodeConfig:
     # CachedLMDecodeDomain.  False restores the uncached domain (the parity
     # oracle, and a fallback for debugging numerics).
     cached: bool = True
+    # Commit-time KV splice (DESIGN.md §12): carry each slot's advanced root
+    # KV row across tokens and splice it into the next search instead of
+    # re-prefilling.  Needs ``cached``; decisions are unchanged (prefill ==
+    # prefill-then-step, the PR-4 parity invariant), only the per-token
+    # prefill cost disappears.
+    kv_splice: bool = False
+    # Cross-token subtree reuse (DESIGN.md §12): reroot on the committed
+    # child and warm-start the next search's root with its carried
+    # N/W/children statistics.  Changes exploration (deliberately) — leave
+    # off for bit-for-bit parity with cold per-token searches.
+    tree_reuse: bool = False
     # Select-stage iteration order inside each per-token search (DESIGN.md
     # §11): "lockstep" descends all of a wave's lanes together with one
     # batched UCT pass per tree level; "scan" is the lane-major original;
     # "auto" follows SearchParams' resolution (lockstep iff use_pallas).
     wave_select: str = "auto"
 
+    def __post_init__(self):
+        if self.kv_splice and not self.cached:
+            raise ValueError("kv_splice carries KV rows across tokens and "
+                             "therefore requires cached=True")
+        if self.tree_reuse and self.method == "root":
+            raise ValueError(
+                "tree_reuse reroots the search tree across tokens, but the "
+                "'root' strategy keeps no shared tree (SearchResult.tree is "
+                "None); pick a tree-bearing method")
+
+    @property
+    def stateful(self) -> bool:
+        """True when decoding carries per-slot state across tokens."""
+        return self.kv_splice or self.tree_reuse
+
     def search_config(self) -> SearchConfig:
         return SearchConfig(
             method=self.method, budget=self.budget, lanes=self.lanes,
-            keep_tree=False,
+            keep_tree=self.tree_reuse,
             params=SearchParams(cp=self.cp, max_depth=self.search_depth,
                                 puct=True, wave_select=self.wave_select))
 
 
 def _domain(cfg: ModelConfig, params, prompt, dcfg: MCTSDecodeConfig,
-            prompt_len=None) -> LMDecodeDomain:
+            prompt_len=None, **extra) -> LMDecodeDomain:
     cls = CachedLMDecodeDomain if dcfg.cached else LMDecodeDomain
     return cls(
         cfg=cfg, params=params, prompt=prompt,
         num_actions=dcfg.num_actions, search_depth=dcfg.search_depth,
         rollout_len=dcfg.rollout_len, temperature=dcfg.temperature,
-        prompt_len=prompt_len)
+        prompt_len=prompt_len, **extra)
 
 
 def mcts_decode(cfg: ModelConfig, params, prompt: np.ndarray,
@@ -97,12 +140,177 @@ def mcts_decode(cfg: ModelConfig, params, prompt: np.ndarray,
     return mcts_decode_batch(cfg, params, prompt, n_tokens, dcfg, seed)[0]
 
 
+def _resolve_mesh(mesh, batch: int):
+    """Shared mesh-resolution rule: None auto-shards real batch parallelism
+    over all visible devices, False forces the single-device vmap."""
+    if mesh is None and batch > 1 and jax.device_count() > 1:
+        from repro.launch.mesh import make_search_mesh
+        mesh = make_search_mesh()
+    return None if mesh is False else mesh
+
+
+class ReusableSearcher:
+    """Batched per-token searcher with an explicit cross-token carry
+    (DESIGN.md §12).  The carry is an opaque per-slot pytree:
+
+    * ``"cache"``/``"logits"`` (``kv_splice``) — each slot's advanced root
+      KV row and paired next-token logits, advanced by one ``seq_step``
+      when a token commits;
+    * ``"warm"`` (``tree_reuse``) — each slot's ``RootCarry``
+      (``core.tree.reroot``): the committed child's N/W, prior row, and
+      children visit/value counts, applied as the next search's root warm
+      start.
+
+    Protocol (the engine's request lifecycle maps 1:1 onto it)::
+
+        carry = s.init_carry(buf_len)            # engine start
+        carry = s.admit(carry, slot, row, plen)  # request admitted: reset
+                                                 # warm, prefill KV row once
+        toks, carry = s.step(buf, lens, rng, carry)   # one token for all B
+
+    ``admit`` is the ONLY place a prompt is prefilled; eviction needs no
+    call (readmission overwrites the slot), which is exactly the eviction
+    contract: a preempted request loses its carry and pays one re-prefill
+    of prompt + committed tokens when readmitted.
+
+    Multi-device: slots spread over a 1-D mesh exactly like the stateless
+    searcher — every carry leaf is sharded along its leading slot axis
+    (DESIGN.md §9); the batch is padded to a device-count multiple and the
+    pad rows ride along as permanently-dead slots.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, dcfg: MCTSDecodeConfig,
+                 batch: int, mesh=None):
+        self.cfg, self.params, self.dcfg, self.batch = cfg, params, dcfg, batch
+        self.mesh = mesh
+        ndev = mesh_num_devices(mesh) if mesh is not None else 1
+        self.padded = batch + ((-batch) % ndev)
+        self.scfg = dcfg.search_config()
+        if mesh is None:
+            self._jstep = jax.jit(self._step_impl)
+        else:
+            shard, repl = batch_sharding(mesh), replicated_sharding(mesh)
+            self._jstep = jax.jit(self._step_impl,
+                                  in_shardings=(shard, shard, repl, shard),
+                                  out_shardings=(shard, shard))
+        self._jadmit = jax.jit(self._admit_impl)
+
+    # -- carry lifecycle ----------------------------------------------------
+    def init_carry(self, buf_len: int):
+        """Identity carry for ``padded`` slots sharing a ``[*, buf_len]``
+        token buffer: uniform/zero warm stats (bit-for-bit a cold search)
+        and zeroed KV rows (dead until ``admit`` prefills them)."""
+        d = self.dcfg
+        carry = {}
+        if d.tree_reuse:
+            iden = empty_root_carry(d.num_actions)
+            carry["warm"] = jax.tree_util.tree_map(
+                lambda v: jnp.broadcast_to(v, (self.padded,) + v.shape).copy(),
+                iden)
+        if d.kv_splice:
+            max_len = buf_len + d.search_depth + d.rollout_len
+            lg, cache = jax.eval_shape(
+                lambda: seq_prefill(self.cfg, self.params,
+                                    jnp.zeros((max_len,), jnp.int32),
+                                    jnp.int32(1)))
+            carry["logits"] = jnp.zeros((self.padded,) + lg.shape, lg.dtype)
+            carry["cache"] = jax.tree_util.tree_map(
+                lambda s: jnp.zeros((self.padded,) + s.shape, s.dtype), cache)
+        return carry
+
+    def admit(self, carry, slot, buf_row, plen):
+        """Reset slot ``slot`` for a fresh request whose padded prefix is
+        ``buf_row`` with true length ``plen``: warm stats back to identity,
+        KV row prefilled ONCE (the request's only prefill)."""
+        return self._jadmit(carry, jnp.int32(slot),
+                            jnp.asarray(buf_row, jnp.int32),
+                            jnp.int32(plen))
+
+    def _admit_impl(self, carry, slot, buf_row, plen):
+        d = self.dcfg
+        new = dict(carry)
+        if d.tree_reuse:
+            iden = empty_root_carry(d.num_actions)
+            new["warm"] = jax.tree_util.tree_map(
+                lambda full, v: full.at[slot].set(v), carry["warm"], iden)
+        if d.kv_splice:
+            max_len = buf_row.shape[0] + d.search_depth + d.rollout_len
+            toks = jnp.zeros((max_len,), jnp.int32)
+            toks = jax.lax.dynamic_update_slice(toks, buf_row, (0,))
+            logits, cache = seq_prefill(self.cfg, self.params, toks, plen)
+            new["cache"] = jax.tree_util.tree_map(
+                lambda full, one: full.at[slot].set(one),
+                carry["cache"], cache)
+            new["logits"] = carry["logits"].at[slot].set(logits)
+        return new
+
+    # -- per-token step -----------------------------------------------------
+    def step(self, buf, lens, rng, carry):
+        """One batched multi-root search over all slots -> each slot's
+        chosen token, plus the carry advanced by the committed tokens."""
+        buf = jnp.asarray(buf, jnp.int32)
+        lens = jnp.asarray(lens, jnp.int32)
+        extra = self.padded - self.batch
+        if extra:
+            buf = jnp.concatenate(
+                [buf, jnp.zeros((extra, buf.shape[1]), buf.dtype)])
+            lens = jnp.concatenate([lens, jnp.zeros((extra,), lens.dtype)])
+        toks, carry = self._jstep(buf, lens, rng, carry)
+        return toks[:self.batch], carry
+
+    def _step_impl(self, buf, lens, rng, carry):
+        cfg, params, d = self.cfg, self.params, self.dcfg
+        domains = []
+        for i in range(self.padded):
+            kw = {}
+            if d.kv_splice:
+                kw["root_cache"] = jax.tree_util.tree_map(
+                    lambda x: x[i], carry["cache"])
+                kw["root_logits"] = carry["logits"][i]
+            if d.tree_reuse:
+                kw["root_warm"] = jax.tree_util.tree_map(
+                    lambda x: x[i], carry["warm"])
+            domains.append(_domain(cfg, params, buf[i], d,
+                                   prompt_len=lens[i], **kw))
+        res = search_batch(domains, self.scfg, rng)
+        if d.kv_splice:
+            # the carried logits ARE the root's next-token distribution
+            tops = jax.vmap(
+                lambda lg: jax.lax.top_k(lg, d.num_actions)[1])(
+                carry["logits"])
+        else:
+            def root_topk(buf_row, len_row):
+                dom = _domain(cfg, params, buf_row, d, prompt_len=len_row)
+                _, top = dom._topk(dom.root_state())
+                return top
+            tops = jax.vmap(root_topk)(buf, lens)
+        toks = tops[jnp.arange(self.padded), res.best_action].astype(jnp.int32)
+        new = dict(carry)
+        if d.tree_reuse:
+            # reroot on the committed child; its stats seed the next search
+            new["warm"] = jax.vmap(reroot)(res.tree, res.best_action)
+        if d.kv_splice:
+            # advance each root row by the committed token (ONE step, vs a
+            # whole-prefix prefill on the cold path)
+            logits, cache = jax.vmap(
+                lambda c, t, p: seq_step(cfg, params, c, t, p))(
+                carry["cache"], toks, lens)
+            new["cache"], new["logits"] = cache, logits
+        return toks, new
+
+
 def make_batched_searcher(cfg: ModelConfig, params, dcfg: MCTSDecodeConfig,
-                          batch: int, mesh=None) -> Callable:
-    """``(token_buf [B, buf_len] i32, lens [B] i32, rng) -> [B] i32``: one
-    jitted device program that searches all B prefixes and returns each
-    slot's chosen next token.  Shapes are static, so one compilation serves
-    every decode step.
+                          batch: int, mesh=None):
+    """Factory for the per-token batched searcher.
+
+    Stateless (default): returns ``(token_buf [B, buf_len] i32, lens [B]
+    i32, rng) -> [B] i32`` — one jitted device program that searches all B
+    prefixes cold and returns each slot's chosen next token.  Shapes are
+    static, so one compilation serves every decode step.
+
+    Stateful (``dcfg.kv_splice`` or ``dcfg.tree_reuse``): returns a
+    ``ReusableSearcher`` whose ``step`` additionally threads the per-slot
+    cross-token carry (spliced KV rows / rerooted subtree stats).
 
     Multi-device: pass ``mesh`` (1-D, from ``make_search_mesh``) — or rely on
     the default, which shards automatically when more than one device is
@@ -112,15 +320,11 @@ def make_batched_searcher(cfg: ModelConfig, params, dcfg: MCTSDecodeConfig,
     Padded rows consume their own rng splits, so with a mesh the sampled
     token stream differs from the unsharded searcher (same distribution).
     """
-    scfg = dcfg.search_config()
-    # auto-shard only real batch parallelism: a 1-slot searcher padded to the
-    # mesh would run device_count searches per token to keep one
-    if mesh is None and batch > 1 and jax.device_count() > 1:
-        from repro.launch.mesh import make_search_mesh
-        mesh = make_search_mesh()
-    if mesh is False:
-        mesh = None
+    mesh = _resolve_mesh(mesh, batch)
+    if dcfg.stateful:
+        return ReusableSearcher(cfg, params, dcfg, batch, mesh=mesh)
 
+    scfg = dcfg.search_config()
     ndev = mesh_num_devices(mesh) if mesh is not None else 1
     padded = batch + ((-batch) % ndev)
 
@@ -197,15 +401,29 @@ def mcts_decode_batch(cfg: ModelConfig, params, prompts,
     to the same single program as equal-length ones.  ``mesh`` as in
     ``make_batched_searcher``: None auto-shards the searched batch over
     multiple devices, False forces single-device vmap.
+
+    With ``dcfg.kv_splice``/``dcfg.tree_reuse`` the per-request carry is
+    threaded across the token loop: every prompt is prefilled once up front
+    and each committed token costs one incremental step (DESIGN.md §12).
     """
     buf, lens = _pad_prompts(prompts, n_tokens)
     b = buf.shape[0]
     searcher = make_batched_searcher(cfg, params, dcfg, batch=b, mesh=mesh)
     rng = jax.random.key(seed)
     out: List[List[int]] = [[] for _ in range(b)]
+    carry = None
+    if dcfg.stateful:
+        carry = searcher.init_carry(buf.shape[1])
+        for i in range(b):
+            carry = searcher.admit(carry, i, buf[i], lens[i])
     for _ in range(n_tokens):
         rng, sub = jax.random.split(rng)
-        toks = np.asarray(searcher(jnp.asarray(buf), jnp.asarray(lens), sub))
+        if dcfg.stateful:
+            toks, carry = searcher.step(buf, lens, sub, carry)
+            toks = np.asarray(toks)
+        else:
+            toks = np.asarray(
+                searcher(jnp.asarray(buf), jnp.asarray(lens), sub))
         for i in range(b):
             out[i].append(int(toks[i]))
             buf[i, lens[i]] = toks[i]

@@ -130,3 +130,120 @@ def test_engine_mcts_finishes_at_sequence_capacity(params):
     # 2 tokens extend the prefix to max_seq, a 3rd is emitted from the full
     # prefix and the request is closed there
     assert len(req.out_tokens) == 3
+
+
+# -- request lifecycle (scheduler + stats, DESIGN.md §12) --------------------
+
+def _eos_stub(eng, tok):
+    """Replace the batched searcher with one that always emits ``tok``."""
+    import jax.numpy as jnp
+    b = eng.ecfg.max_batch
+    eng._mcts_search = lambda buf, lens, rng: jnp.full((b,), tok, jnp.int32)
+
+
+def test_engine_eos_mid_budget_frees_slot_same_step(params):
+    """EOS mid-budget must retire the slot AND refill it within the same
+    engine step — the replacement is live before the next step() call."""
+    eng = ServingEngine(CFG, params, EngineConfig(
+        max_batch=1, max_seq=16, eos_token=7, decode="mcts", mcts=DCFG))
+    _eos_stub(eng, 7)
+    eng.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                       max_new_tokens=5))
+    eng.submit(Request(uid=1, prompt=np.array([3, 4], np.int32),
+                       max_new_tokens=5))
+    emitted = eng.step()
+    assert emitted == 1
+    # uid0 finished well under budget...
+    assert eng.sched.request(0).uid == 1 or eng.slots[0].uid == 1
+    # ...and uid1 was admitted into the freed slot within the same step
+    assert eng.sched.live() == [0]
+    assert eng.sched.request(0).uid == 1
+    assert eng.step() == 1
+    assert all(s.done for s in eng.slots)
+    assert eng.stats.requests[0].tokens == 1     # stopped at EOS, not budget
+
+
+def test_engine_populates_lifecycle_timestamps(params):
+    eng = ServingEngine(CFG, params, EngineConfig(
+        max_batch=2, max_seq=16, decode="mcts", mcts=DCFG))
+    r0 = Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                 max_new_tokens=2)
+    eng.submit(r0)
+    out = eng.run_until_drained()
+    assert r0.enqueue_t > 0.0
+    assert r0.finish_t >= r0.enqueue_t
+    s = out["requests"][0]
+    assert s["done"] and s["tokens"] == 2
+    for k in ("queue_wait", "ttft", "latency"):
+        assert s[k] is not None and s[k] >= 0.0
+    assert out["latency_p95"] >= out["latency_p50"] > 0.0
+    snap = out["stats"]
+    assert snap["serving/requests_finished"] == 1.0
+    assert snap["serving/tokens"] == 2.0
+    assert snap["serving/searches"] >= 2.0
+
+
+def test_engine_greedy_records_stats(params):
+    eng = ServingEngine(CFG, params, EngineConfig(max_batch=2, max_seq=16))
+    eng.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                       max_new_tokens=3))
+    out = eng.run_until_drained()
+    assert out["tokens"] >= 2                 # decode steps (prefill extra)
+    assert out["requests"][0]["tokens"] == 3  # prefill token + decode steps
+    assert out["requests"][0]["done"]
+    assert out["stats"]["serving/requests_finished"] == 1.0
+
+
+def test_engine_preemption_roundtrip_keeps_committed_tokens(params):
+    """A higher-priority arrival evicts the live request; the victim
+    resumes later with its committed tokens intact and finishes its full
+    budget (prompt + committed becomes the readmission prefix)."""
+    eng = ServingEngine(CFG, params, EngineConfig(
+        max_batch=1, max_seq=32, decode="mcts", mcts=DCFG))
+    eng.submit(Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                       max_new_tokens=4, priority=0))
+    assert eng.step() == 1                    # uid0 commits one token
+    first = list(eng.slots[0].out_tokens)
+    eng.submit(Request(uid=1, prompt=np.array([4, 5], np.int32),
+                       max_new_tokens=2, priority=5))
+    out = eng.run_until_drained()
+    reqs = out["requests"]
+    assert reqs[0]["done"] and reqs[1]["done"]
+    assert reqs[0]["preemptions"] == 1
+    assert reqs[0]["tokens"] == 4             # full budget despite eviction
+    assert reqs[1]["tokens"] == 2
+    victim = next(s for s in eng.slots if s and s.uid == 0)
+    assert victim.out_tokens[: len(first)] == first
+    assert out["stats"]["serving/preemptions"] == 1.0
+
+
+@pytest.mark.parametrize("policy", ("fcfs", "spf"))
+def test_engine_admission_policy_wired(params, policy):
+    eng = ServingEngine(CFG, params, EngineConfig(
+        max_batch=1, max_seq=16, decode="mcts", policy=policy, mcts=DCFG))
+    eng.submit(Request(uid=0, prompt=np.array([1, 2, 3, 4], np.int32),
+                       max_new_tokens=2))
+    eng.submit(Request(uid=1, prompt=np.array([5], np.int32),
+                       max_new_tokens=2))
+    eng.step()
+    first_uid = next(s.uid for s in eng.slots if s)
+    assert first_uid == (1 if policy == "spf" else 0)
+    eng.run_until_drained()
+    assert eng.stats.finished == 2
+
+
+def test_engine_reuse_mode_drains(params):
+    """KV splice + subtree reuse through the full engine lifecycle: the
+    stateful carry survives admissions, refills and completion."""
+    dcfg = MCTSDecodeConfig(num_actions=3, budget=6, lanes=2, search_depth=2,
+                            rollout_len=1, kv_splice=True, tree_reuse=True)
+    eng = ServingEngine(CFG, params, EngineConfig(
+        max_batch=2, max_seq=16, decode="mcts", mcts=dcfg, mesh=False))
+    for uid, (plen, n) in enumerate(((3, 2), (2, 3), (4, 2))):
+        eng.submit(Request(uid=uid, prompt=np.arange(1, plen + 1,
+                                                     dtype=np.int32),
+                           max_new_tokens=n))
+    out = eng.run_until_drained()
+    assert out["tokens"] == 7
+    assert all(r["done"] for r in out["requests"].values())
+    assert eng._carry is not None

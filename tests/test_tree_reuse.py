@@ -1,0 +1,309 @@
+"""Cross-token subtree reuse + commit-time KV splice (DESIGN.md §12).
+
+Invariants under test:
+
+* ``warm_start_root(tree, empty_root_carry(A))`` is bit-for-bit the
+  identity, so a search seeded with the identity carry equals a cold
+  search exactly — the admission reset in serving is free of drift.
+* ``reroot`` compacts exactly the chosen child's N/W, prior row and
+  grandchild stats, with the identity fallback on unexpanded children.
+* The searcher-threaded carry equals the explicit path — a search whose
+  domain is seeded with the carried visit counts — bit-for-bit on both
+  the emitted tokens and the carried statistics (the acceptance parity).
+* ``kv_splice`` changes no decisions: spliced decode == cold cached
+  decode, token for token (prefill == prefill-then-step, the PR-4
+  invariant).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_default_matmul_precision", "highest")
+
+from repro.core.domains.lm_decode import CachedLMDecodeDomain  # noqa: E402
+from repro.core.tree import (ROOT, UNEXPANDED, empty_root_carry,  # noqa: E402
+                             init_tree, reroot, warm_start_root)
+from repro.search import SearchConfig, SearchParams, search, search_batch  # noqa: E402
+from repro.models.base import ModelConfig, get_family  # noqa: E402
+from repro.serving import (MCTSDecodeConfig, ReusableSearcher,  # noqa: E402
+                           make_batched_searcher, mcts_decode_batch)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                  dtype="float32", ce_chunk=8, remat=False)
+A = 3
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_family(CFG).init(CFG, jax.random.key(0))
+
+
+def _dcfg(**kw):
+    base = dict(method="pipeline", num_actions=A, budget=8, lanes=2,
+                search_depth=3, rollout_len=2, cached=True)
+    base.update(kw)
+    return MCTSDecodeConfig(**base)
+
+
+def _domain(params, prompt, plen, **extra):
+    return CachedLMDecodeDomain(
+        cfg=CFG, params=params, prompt=jnp.asarray(prompt, jnp.int32),
+        num_actions=A, search_depth=3, rollout_len=2,
+        prompt_len=jnp.int32(plen), **extra)
+
+
+def _scfg():
+    return SearchConfig(method="pipeline", budget=8, lanes=2, keep_tree=True,
+                        params=SearchParams(cp=1.0, max_depth=3, puct=True))
+
+
+def _assert_trees_equal(t1, t2):
+    for (p1, l1), (p2, l2) in zip(
+            jax.tree_util.tree_leaves_with_path(t1),
+            jax.tree_util.tree_leaves_with_path(t2)):
+        assert p1 == p2
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2),
+                                      err_msg=str(p1))
+
+
+# -- config validation -------------------------------------------------------
+
+def test_kv_splice_requires_cached():
+    with pytest.raises(ValueError, match="cached"):
+        _dcfg(kv_splice=True, cached=False)
+
+
+def test_tree_reuse_rejects_root_strategy():
+    with pytest.raises(ValueError, match="root"):
+        _dcfg(tree_reuse=True, method="root")
+
+
+def test_stateful_flag():
+    assert not _dcfg().stateful
+    assert _dcfg(kv_splice=True).stateful
+    assert _dcfg(tree_reuse=True).stateful
+
+
+# -- warm-start identity -----------------------------------------------------
+
+def test_identity_carry_is_bitwise_noop(params):
+    dom = _domain(params, [1, 2, 3, 0, 0], 3)
+    tree = init_tree(dom, max_nodes=16)
+    _assert_trees_equal(warm_start_root(tree, empty_root_carry(A)), tree)
+
+
+def test_identity_warm_search_equals_cold_search(params):
+    prompt = [1, 2, 3, 0, 0, 0]
+    rng = jax.random.key(7)
+    cold = search(_domain(params, prompt, 3), _scfg(), rng)
+    warm = search(_domain(params, prompt, 3,
+                          root_warm=empty_root_carry(A)), _scfg(), rng)
+    np.testing.assert_array_equal(np.asarray(cold.action_visits),
+                                  np.asarray(warm.action_visits))
+    np.testing.assert_array_equal(np.asarray(cold.action_value),
+                                  np.asarray(warm.action_value))
+    assert int(cold.best_action) == int(warm.best_action)
+    _assert_trees_equal(cold.tree, warm.tree)
+
+
+# -- reroot ------------------------------------------------------------------
+
+def test_reroot_extracts_child_statistics(params):
+    dom = _domain(params, [1, 2, 3, 0, 0], 3)
+    tree = init_tree(dom, max_nodes=8)
+    # hand-build: root has children [1, 2, -1]; node 1 has child 3
+    tree["children"] = tree["children"].at[ROOT].set(
+        jnp.array([1, 2, UNEXPANDED]))
+    tree["children"] = tree["children"].at[1].set(
+        jnp.array([3, UNEXPANDED, UNEXPANDED]))
+    tree["visits"] = tree["visits"].at[jnp.array([1, 2, 3])].set(
+        jnp.array([5, 2, 4]))
+    tree["value"] = tree["value"].at[jnp.array([1, 2, 3])].set(
+        jnp.array([2.5, 1.0, 2.0]))
+    tree["prior"] = tree["prior"].at[1].set(jnp.array([0.5, 0.3, 0.2]))
+    c = jax.tree_util.tree_map(np.asarray, reroot(tree, jnp.int32(0)))
+    assert c["visits"] == 5 and c["value"] == 2.5
+    np.testing.assert_allclose(c["prior"], [0.5, 0.3, 0.2])
+    np.testing.assert_array_equal(c["child_visits"], [4, 0, 0])
+    np.testing.assert_allclose(c["child_value"], [2.0, 0.0, 0.0])
+
+
+def test_reroot_on_unexpanded_child_is_identity_carry(params):
+    dom = _domain(params, [1, 2, 3, 0, 0], 3)
+    tree = init_tree(dom, max_nodes=8)        # root has no children yet
+    c = reroot(tree, jnp.int32(1))
+    iden = empty_root_carry(A)
+    _assert_trees_equal(jax.tree_util.tree_map(np.asarray, c),
+                        jax.tree_util.tree_map(np.asarray, iden))
+
+
+def test_warm_start_root_blends_prior_with_grandchild_visits(params):
+    dom = _domain(params, [1, 2, 3, 0, 0], 3)
+    tree = init_tree(dom, max_nodes=8)
+    carry = {"visits": jnp.int32(6), "value": jnp.float32(3.0),
+             "prior": jnp.array([0.5, 0.25, 0.25]),
+             "child_visits": jnp.array([4, 1, 0], jnp.int32),
+             "child_value": jnp.array([2.0, 0.5, 0.0])}
+    t = warm_start_root(tree, carry)
+    assert int(t["visits"][ROOT]) == 6
+    assert float(t["value"][ROOT]) == 3.0
+    np.testing.assert_allclose(
+        np.asarray(t["prior"][ROOT]),
+        np.array([4.5, 1.25, 0.25]) / 6.0, rtol=1e-6)
+
+
+# -- searcher-threaded carry == explicitly seeded search (acceptance) --------
+
+def test_searcher_carry_matches_explicitly_seeded_search(params):
+    """Thread the carry through ReusableSearcher for two tokens; replay the
+    same two searches with the carried statistics seeded explicitly into a
+    fresh domain.  Tokens and carried visit counts must match bit-for-bit;
+    float leaves (value sums, priors) to tight tolerance — the searcher
+    fuses its search into one XLA program with the token/reroot ops while
+    the replay runs ``search_batch`` standalone, and fusion may differ in
+    the last ulp.  (The fully-bitwise seeded-carry check is the test
+    below, which routes both runs through the same compiled step.)
+    """
+    dcfg = _dcfg(tree_reuse=True, kv_splice=False)
+    scfg = dcfg.search_config()
+    assert scfg.keep_tree
+    prompt = np.array([1, 2, 3], np.int32)
+    buf = np.zeros((1, 6), np.int32)
+    buf[0, :3] = prompt
+    lens = np.array([3], np.int32)
+
+    searcher = make_batched_searcher(CFG, params, dcfg, batch=1, mesh=False)
+    assert isinstance(searcher, ReusableSearcher)
+    carry = searcher.init_carry(buf.shape[1])
+    carry = searcher.admit(carry, 0, buf[0], 3)
+
+    rng1, rng2 = jax.random.key(11), jax.random.key(12)
+    explicit = empty_root_carry(A)            # what admit seeds
+    for tok_rng in (rng1, rng2):
+        toks, carry = searcher.step(buf, lens, tok_rng, carry)
+        # explicit path: same batched search, carry seeded via the domain
+        dom = CachedLMDecodeDomain(
+            cfg=CFG, params=params, prompt=jnp.asarray(buf[0]),
+            num_actions=A, search_depth=dcfg.search_depth,
+            rollout_len=dcfg.rollout_len, prompt_len=jnp.int32(lens[0]),
+            root_warm=explicit)
+        res = search_batch([dom], scfg, tok_rng)
+        tree0 = jax.tree_util.tree_map(lambda x: x[0], res.tree)
+        explicit = reroot(tree0, res.best_action[0])
+        _, top = dom._topk(dom.root_state())
+        assert int(toks[0]) == int(top[int(res.best_action[0])])
+        got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]),
+                                     carry["warm"])
+        want = jax.tree_util.tree_map(np.asarray, explicit)
+        for key in ("visits", "child_visits"):              # bit-for-bit
+            np.testing.assert_array_equal(got[key], want[key], err_msg=key)
+        for key in ("value", "prior", "child_value"):
+            np.testing.assert_allclose(got[key], want[key],
+                                       rtol=1e-5, atol=1e-6, err_msg=key)
+        buf[0, lens[0]] = int(toks[0])
+        lens[0] += 1
+
+
+def test_seeded_carry_reproduces_threaded_run_bitwise(params):
+    """The acceptance parity, fully bitwise: a FRESH searcher whose
+    identity carry is overwritten with the carried statistics (the seeded
+    cold search) must reproduce the threaded searcher's next step exactly —
+    same token, same carried stats, every leaf bit-for-bit.  Proves the
+    carry is the complete cross-token state: nothing rides outside it."""
+    dcfg = _dcfg(tree_reuse=True, kv_splice=False)
+    buf = np.zeros((1, 6), np.int32)
+    buf[0, :3] = [1, 2, 3]
+    lens = np.array([3], np.int32)
+    searcher = make_batched_searcher(CFG, params, dcfg, batch=1, mesh=False)
+    carry = searcher.init_carry(buf.shape[1])
+    carry = searcher.admit(carry, 0, buf[0], 3)
+    tok1, carry = searcher.step(buf, lens, jax.random.key(21), carry)
+    buf[0, 3] = int(tok1[0])
+    lens[0] += 1
+
+    # threaded side: continue with the carry in hand
+    tok2, carry2 = searcher.step(buf, lens, jax.random.key(22), carry)
+
+    # seeded side: fresh searcher, identity carry overwritten with the
+    # carried visit counts/values — i.e. a cold search explicitly seeded
+    fresh = make_batched_searcher(CFG, params, dcfg, batch=1, mesh=False)
+    seeded = fresh.init_carry(buf.shape[1])
+    seeded = fresh.admit(seeded, 0, buf[0], int(lens[0]))
+    seeded = dict(seeded)
+    seeded["warm"] = jax.tree_util.tree_map(jnp.asarray, carry["warm"])
+    tok2b, carry2b = fresh.step(buf, lens, jax.random.key(22), seeded)
+
+    assert int(tok2[0]) == int(tok2b[0])
+    _assert_trees_equal(
+        jax.tree_util.tree_map(np.asarray, carry2),
+        jax.tree_util.tree_map(np.asarray, carry2b))
+
+
+def test_reused_decode_differs_then_identity_at_zero(params):
+    """tree_reuse deliberately changes exploration after the first token
+    (warm priors), but the FIRST token of every request — searched from the
+    identity carry — matches the cold path exactly."""
+    prompts = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
+    cold = mcts_decode_batch(CFG, params, prompts, 3, _dcfg(), seed=0)
+    warm = mcts_decode_batch(CFG, params, prompts, 3,
+                             _dcfg(tree_reuse=True), seed=0)
+    for c, w in zip(cold, warm):
+        assert c[0] == w[0]
+
+
+# -- kv splice ---------------------------------------------------------------
+
+def test_kv_splice_token_parity_with_cold(params):
+    """Spliced decode must equal cold cached decode token-for-token: the
+    carry row after seq_step(commit) equals what prefill(prefix+tok) builds
+    (the PR-4 prefill/step parity invariant), so decisions cannot drift."""
+    prompts = [np.array([1, 2, 3, 4], np.int32), np.array([9, 8], np.int32)]
+    cold = mcts_decode_batch(CFG, params, prompts, 4, _dcfg(), seed=3)
+    spliced = mcts_decode_batch(CFG, params, prompts, 4,
+                                _dcfg(kv_splice=True), seed=3)
+    assert spliced == cold
+
+
+def test_splice_admit_prefills_one_row_only(params):
+    dcfg = _dcfg(kv_splice=True)
+    searcher = make_batched_searcher(CFG, params, dcfg, batch=2, mesh=False)
+    carry = searcher.init_carry(8)
+    row = np.zeros(8, np.int32)
+    row[:3] = [1, 2, 3]
+    carry2 = searcher.admit(carry, 1, row, 3)
+    # slot 0 rows untouched, slot 1 rows rewritten
+    for leaf0, leaf2 in zip(jax.tree_util.tree_leaves(carry["cache"]),
+                            jax.tree_util.tree_leaves(carry2["cache"])):
+        np.testing.assert_array_equal(np.asarray(leaf0[0]),
+                                      np.asarray(leaf2[0]))
+    assert not np.array_equal(np.asarray(carry["logits"][1]),
+                              np.asarray(carry2["logits"][1]))
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >1 device (CI multi-device job)")
+def test_kv_splice_parity_under_mesh(params):
+    """Splice parity survives mesh sharding: the stateful searcher pads and
+    shards its carry along the slot axis exactly like the stateless
+    searcher pads buf/lens, so decisions still match token-for-token."""
+    prompts = np.array([[1, 2, 3], [4, 5, 6], [7, 8, 9]], np.int32)
+    cold = mcts_decode_batch(CFG, params, prompts, 3, _dcfg(), seed=5,
+                             mesh=None)
+    spliced = mcts_decode_batch(CFG, params, prompts, 3,
+                                _dcfg(kv_splice=True), seed=5, mesh=None)
+    assert spliced == cold
+    # both knobs: still drains with the carry sharded over the mesh
+    warm = mcts_decode_batch(CFG, params, prompts, 3,
+                             _dcfg(kv_splice=True, tree_reuse=True), seed=5,
+                             mesh=None)
+    assert all(len(w) == 3 for w in warm)
+
+
+def test_domain_contract_with_reuse_fields(params):
+    from repro.search import check_domain
+    dom = _domain(params, [1, 2, 3, 0, 0], 3, root_warm=empty_root_carry(A))
+    assert check_domain(dom)
