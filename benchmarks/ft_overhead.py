@@ -1,0 +1,91 @@
+"""Elastic-driver overhead and failure cost (DESIGN.md §13).
+
+At zero failures ``ft_search_batch`` (one logical host owning the whole
+mesh) runs the exact same sharded program as ``shard_search_batch`` plus the
+driver's bookkeeping (key pre-split, queue management, host-side commit of
+the result accumulator) — the ``ft_driver`` row's overhead ratio is gated at
+<=1.05x in CI.  The ``ft_driver_kill`` row measures a run that loses a host
+mid-flight: the paper's failure model prices a loss in lost playouts, and
+the derived column reports exactly that (requeued roots x budget).
+
+Both sides are timed end-to-end to host numpy (the driver commits to host
+as part of its contract, so the baseline must pay the same transfer).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.domains.pgame import PGameDomain
+from repro.launch.mesh import make_search_mesh
+from repro.search import (ElasticSearchDriver, FTSearchConfig, SearchConfig,
+                          SearchParams, shard_search_batch)
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=2)
+SP = SearchParams(cp=0.7, max_depth=6)
+
+
+def _to_host(res):
+    return jax.tree_util.tree_map(np.asarray, res)
+
+
+def _time(f, reps: int) -> float:
+    f()                                    # warm libraries / first dispatch
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        f()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(report, smoke: bool = False):
+    b = 4 if smoke else 8
+    budget = 32 if smoke else 128
+    reps = 2 if smoke else 3
+    cfg = SearchConfig(method="pipeline", budget=budget, lanes=4, params=SP,
+                      keep_tree=False)
+    doms = [DOM] * b
+    rng = jax.random.key(0)
+    mesh = make_search_mesh()
+
+    def plain():
+        return _to_host(shard_search_batch(doms, cfg, rng, mesh=mesh))
+
+    def ft_zero_failures():
+        drv = ElasticSearchDriver(doms, cfg, rng,
+                                  FTSearchConfig(hosts=1, chunk=0), mesh=mesh)
+        return drv.run()
+
+    t_plain = _time(plain, reps)
+    t_ft = _time(ft_zero_failures, reps)
+    ratio = t_ft / t_plain
+    report(f"ft_plain_B{b}", t_plain * 1e6,
+           f"total_playouts_per_s={b * budget / t_plain:,.0f}")
+    report(f"ft_driver_B{b}", t_ft * 1e6,
+           f"overhead_vs_plain={ratio:.3f}x (CI gate <=1.05x, zero failures)")
+
+    # merge contract sanity while both results are in hand
+    base = plain()
+    out = ft_zero_failures()
+    np.testing.assert_array_equal(base.action_visits, out.action_visits)
+
+    # failure cost: lose one of two hosts the moment it launches its chunk;
+    # the run completes, paying only the victim's in-flight playouts again
+    def ft_kill():
+        drv = ElasticSearchDriver(
+            doms, cfg, rng,
+            FTSearchConfig(hosts=2, chunk=b // 2, watchdog_s=30.0,
+                           kill_host_at_root=b - 1), mesh=mesh)
+        res = drv.run()
+        return drv, res
+
+    drv, res = ft_kill()
+    np.testing.assert_array_equal(base.action_visits, res.action_visits)
+    t_kill = _time(lambda: ft_kill(), 1)
+    lost = len(drv.report.requeued)
+    report(f"ft_driver_kill_B{b}", t_kill * 1e6,
+           f"requeued_roots={lost} lost_playouts={lost * budget} "
+           f"recovery_vs_plain={t_kill / t_plain:.2f}x")

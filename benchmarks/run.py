@@ -26,6 +26,7 @@ MODULES = [
     "mcts_decode_bench",     # modern instantiation (NN playouts)
     "serving_bench",         # request lifecycle: cold vs KV-splice+reuse
     "shard_scaling",         # batch axis over a device mesh (DESIGN.md §9)
+    "ft_overhead",           # elastic driver at zero failures (DESIGN.md §13)
     "straggler_bench",       # runtime policy
     "kernel_bench",          # per-kernel micro numbers
     "ablations",             # vl-weight / in-flight / MoE-capacity knobs

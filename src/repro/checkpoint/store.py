@@ -88,6 +88,23 @@ def _gc(ckpt_dir: str, keep: int):
     steps = sorted(_committed_steps(ckpt_dir))
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    # Reap debris from crashed saves (single-writer contract: _gc runs after
+    # the current save has committed, so anything else is dead):
+    #  * step_*.tmp    — killed before the atomic rename;
+    #  * uncommitted step dirs — killed between the rename and the COMMITTED
+    #    marker; never observable via latest_step/restore, so safe to drop.
+    committed = set(steps)
+    for name in os.listdir(ckpt_dir):
+        path = os.path.join(ckpt_dir, name)
+        if name.startswith("step_") and name.endswith(".tmp"):
+            shutil.rmtree(path, ignore_errors=True)
+        elif name.startswith("step_"):
+            try:
+                s = int(name[5:])
+            except ValueError:
+                continue
+            if s not in committed:
+                shutil.rmtree(path, ignore_errors=True)
 
 
 def _committed_steps(ckpt_dir: str):
@@ -115,6 +132,10 @@ def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
     leaves, treedef = jax.tree_util.tree_flatten(like)
     with open(os.path.join(step_dir, "manifest.json")) as f:
         manifest = json.load(f)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint at {step_dir} has {manifest['n_leaves']} leaves but "
+            f"the restore template has {len(leaves)} — structures differ")
     arrays = [_from_savable(np.load(p), dt) for p, dt in
               zip(_leaf_paths(step_dir, len(leaves)), manifest["dtypes"])]
     for a, l in zip(arrays, leaves):

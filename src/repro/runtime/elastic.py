@@ -33,3 +33,16 @@ def reshard_state(cfg: ModelConfig, state: Dict[str, Any], new_mesh,
                   rules=None) -> Dict[str, Any]:
     sh = state_shardings(cfg, state, new_mesh, rules or DEFAULT_RULES)
     return jax.tree_util.tree_map(jax.device_put, state, sh)
+
+
+def shrink_mesh(mesh, lost_devices, axis: str = "batch"):
+    """A 1-D mesh over ``mesh``'s devices minus ``lost_devices`` — the search
+    analogue of ``reshard_state``: after a host loss the elastic driver
+    re-places subsequent work onto the surviving devices only (DESIGN.md
+    §13).  Returns ``None`` when no device survives."""
+    from repro.parallel.compat import mesh_from_devices
+    lost = set(lost_devices)
+    keep = [d for d in mesh.devices.flat if d not in lost]
+    if not keep:
+        return None
+    return mesh_from_devices(keep, axis)

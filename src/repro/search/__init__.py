@@ -10,6 +10,9 @@ Entry points
     search_batch(domains, cfg, rng)     B searches in ONE device program
                                         (auto-shards over a device mesh)
     shard_search_batch(...)             the explicit mesh-sharded form
+                                        (single- or multi-host meshes)
+    ft_search_batch(...)                the elastic fault-tolerant driver
+                                        (requeue-and-shrink; DESIGN §13)
 
 Configuration
     SearchConfig    method/budget/lanes/max_nodes/keep_tree + ``params``
@@ -35,13 +38,17 @@ from repro.search.api import (STATS_KEYS, SearchConfig,  # noqa: F401
                               register_strategy, search, search_batch)
 from repro.search.domain import (Domain, SupportsPriors,  # noqa: F401
                                  check_domain)
-from repro.search.sharding import shard_search_batch  # noqa: F401
+from repro.search.sharding import (shard_search_batch,  # noqa: F401
+                                   shard_search_keys)
+from repro.search.ft import (ElasticSearchDriver, FTReport,  # noqa: F401
+                             FTSearchConfig, ft_search_batch)
 from repro.search import strategies  # noqa: F401  (registers the built-ins)
 
 __all__ = [
     "STATS_KEYS", "SearchConfig", "SearchParams", "SearchResult",
     "Domain", "SupportsPriors", "check_domain",
-    "search", "search_batch", "shard_search_batch",
+    "search", "search_batch", "shard_search_batch", "shard_search_keys",
+    "ElasticSearchDriver", "FTReport", "FTSearchConfig", "ft_search_batch",
     "get_strategy", "list_strategies", "register_strategy",
     "strategies",
 ]

@@ -1,0 +1,327 @@
+"""Elastic fault-tolerant multi-root search (DESIGN.md §13).
+
+The paper's root parallelism is naturally failure-tolerant: the B searches
+are independent and only merged at the end, so losing a host must cost only
+that host's *in-flight* roots — never the job.  ``ElasticSearchDriver``
+makes that concrete:
+
+* roots are partitioned into per-host work queues (a "host" is a logical
+  worker owning a slice of the mesh's devices; in a ``jax.distributed`` job
+  the slices line up with processes);
+* each host runs its queue in chunks through the same per-root program as
+  ``search_batch`` — under the root's ORIGINAL key, split from the driver
+  rng into exactly B keys before any partitioning — so every committed root
+  is bit-for-bit identical to an uninterrupted run;
+* a lost host (``runtime.ft.SimulatedFailure``) or a stalled one (detected
+  by ``runtime.ft.Heartbeat``'s watchdog) is removed from the world: its
+  in-flight roots are requeued onto survivors, its unstarted queue is
+  redistributed, and its devices are dropped from the mesh
+  (``runtime.elastic.shrink_mesh``) so subsequent placement targets the
+  shrunken world;
+* completed-root results are committed through ``checkpoint.store`` (atomic
+  rename + COMMITTED marker, keep-N) — a *driver* restart with the same
+  ``ckpt_dir`` resumes from committed roots and re-runs only the rest.
+
+Deterministic failure injection is part of the public surface (the
+``runtime.ft.FTConfig`` idiom): ``kill_host_at_root=N`` kills the host that
+owns root N the moment it launches a chunk containing N;
+``stall_host_at_root=K`` hangs that host past the watchdog instead.  Each
+fires at most once, so a requeued root does not re-trigger the failure —
+and a failure point that is already committed (or never launched) is a
+no-op.  The fault-injection suite (tests/test_search_ft.py) drives every
+contract above through these two knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.runtime.ft import Heartbeat, SimulatedFailure, WatchdogTimeout
+
+__all__ = ["FTSearchConfig", "FTReport", "ElasticSearchDriver",
+           "ft_search_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FTSearchConfig:
+    """Elastic-driver knobs + deterministic failure injection.
+
+    hosts:            logical workers the roots are partitioned over
+                      (clamped to B).
+    chunk:            roots a host launches per round (0 = its whole queue).
+    watchdog_s:       per-host heartbeat timeout (runtime.ft.Heartbeat).
+    stall_s:          injected stall duration (0 -> 3x watchdog_s).
+    ckpt_dir:         commit completed roots here (None = no checkpointing).
+    ckpt_keep:        keep-N for committed checkpoints.
+    max_requeues:     per-root requeue budget before the driver gives up.
+    partition_seed:   None = contiguous blocks; int = seeded shuffle of the
+                      root->host assignment.
+    requeue_seed:     None = requeue victims onto survivors round-robin in
+                      root order; int = seeded shuffle first (merge results
+                      are invariant to this — tests/test_properties.py).
+    kill_host_at_root / stall_host_at_root:  failure injection, see module
+                      docstring.  Each fires at most once per run.
+    """
+
+    hosts: int = 1
+    chunk: int = 0
+    watchdog_s: float = 5.0
+    stall_s: float = 0.0
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    max_requeues: int = 2
+    partition_seed: Optional[int] = None
+    requeue_seed: Optional[int] = None
+    kill_host_at_root: Optional[int] = None
+    stall_host_at_root: Optional[int] = None
+
+
+@dataclasses.dataclass
+class FTReport:
+    """What the run actually did (the fault-injection suite's oracle)."""
+
+    runs: np.ndarray                    # [B] launches per root
+    requeued: List[int]                 # in-flight roots re-run after a loss
+    lost_hosts: List[int]               # logical hosts removed from the world
+    resumed: List[int]                  # roots restored from a checkpoint
+    rounds: int = 0
+    commits: int = 0
+
+
+class ElasticSearchDriver:
+    """Requeue-and-shrink driver over per-host work queues (see module doc).
+
+    ``mesh=None`` runs each chunk locally (the plain vmap path — in a
+    multi-process job every process then computes the same chunks, which
+    keeps the processes in lockstep without collectives); pass a 1-D mesh to
+    partition its devices among the hosts and run each chunk through
+    ``shard_search_keys`` on the owner's slice.
+    """
+
+    def __init__(self, domains, cfg, rng, ft: Optional[FTSearchConfig] = None,
+                 *, mesh=None):
+        self.domains = list(domains)
+        if not self.domains:
+            raise ValueError("ft_search_batch needs at least one domain")
+        b = len(self.domains)
+        self.cfg = cfg
+        self.ft = ft or FTSearchConfig()
+        # rng contract: exactly B keys, split before partitioning/placement —
+        # the invariant that makes requeue/merge bitwise-exact
+        self.keys = jax.random.split(rng, b)
+        self.mesh = mesh
+        hosts = max(1, min(self.ft.hosts, b))
+        order = np.arange(b)
+        if self.ft.partition_seed is not None:
+            order = np.random.RandomState(self.ft.partition_seed)\
+                .permutation(b)
+        self.queues: List[List[int]] = [
+            [int(i) for i in q] for q in np.array_split(order, hosts)]
+        self.alive = [True] * hosts
+        self._host_devices = self._partition_devices(mesh, hosts)
+        self._done = np.zeros(b, bool)
+        self._acc = None                          # [B,...] result accumulator
+        self._requeues = np.zeros(b, np.int32)
+        self._fired = {"kill": False, "stall": False}
+        self.report = FTReport(runs=np.zeros(b, np.int64), requeued=[],
+                               lost_hosts=[], resumed=[])
+        if self.ft.ckpt_dir:
+            self._try_resume()
+
+    # -- placement ---------------------------------------------------------
+    @staticmethod
+    def _partition_devices(mesh, hosts: int):
+        if mesh is None:
+            return [None] * hosts
+        devs = list(mesh.devices.flat)
+        return [list(s) for s in np.array_split(np.asarray(devs, object),
+                                                hosts)]
+
+    def _host_mesh(self, h: int):
+        from repro.parallel.compat import mesh_from_devices
+        devs = self._host_devices[h]
+        if not devs:
+            return None
+        return mesh_from_devices(devs)
+
+    def _shrink(self, lost: int) -> None:
+        """Drop ``lost``'s devices and re-place the surviving hosts over the
+        shrunken world (reshard_state-style: subsequent chunks target the new
+        meshes; committed results already live on the host)."""
+        if self.mesh is None:
+            return
+        from repro.runtime.elastic import shrink_mesh
+        self.mesh = shrink_mesh(self.mesh, self._host_devices[lost] or [])
+        self._host_devices[lost] = []
+        survivors = [h for h in range(len(self.alive)) if self.alive[h]]
+        if self.mesh is None:
+            for h in survivors:
+                self._host_devices[h] = []
+            return
+        keep = np.asarray(list(self.mesh.devices.flat), object)
+        for h, sl in zip(survivors, np.array_split(keep, len(survivors))):
+            self._host_devices[h] = list(sl)
+
+    # -- checkpointing -----------------------------------------------------
+    def _template(self):
+        """[B, ...] zeroed accumulator with the exact result structure
+        (eval_shape: no compute)."""
+        from repro.search.api import search
+        b = len(self.domains)
+        one = jax.eval_shape(
+            lambda k: search(self.domains[0], self.cfg, k), self.keys[0])
+        return jax.tree_util.tree_map(
+            lambda s: np.zeros((b,) + tuple(s.shape), s.dtype), one)
+
+    def _try_resume(self) -> None:
+        from repro.checkpoint import store
+        step = store.latest_step(self.ft.ckpt_dir)
+        if step is None:
+            return
+        like = {"done": np.zeros(len(self.domains), bool),
+                "results": self._template()}
+        state = store.restore(self.ft.ckpt_dir, step, like)
+        self._done = np.asarray(state["done"], bool).copy()
+        self._acc = state["results"]
+        self.report.resumed = [int(i) for i in np.nonzero(self._done)[0]]
+
+    def _commit(self, roots: List[int], res) -> None:
+        if self._acc is None:
+            # shape the accumulator off the first result instead of
+            # _template(): eval_shape re-traces the whole search program,
+            # which on the zero-failure path is pure driver overhead
+            # (benchmarks/ft_overhead.py gates it at <=5%)
+            b = len(self.domains)
+            self._acc = jax.tree_util.tree_map(
+                lambda x: np.zeros((b,) + tuple(x.shape[1:]), x.dtype), res)
+        flat_acc = jax.tree_util.tree_leaves(self._acc)
+        flat_res = jax.tree_util.tree_leaves(res)
+        for acc, leaf in zip(flat_acc, flat_res):
+            rows = np.asarray(leaf)[:len(roots)]
+            acc[np.asarray(roots)] = rows
+        self._done[np.asarray(roots)] = True
+        self.report.commits += 1
+        if self.ft.ckpt_dir:
+            from repro.checkpoint import store
+            store.save(self.ft.ckpt_dir, self.report.commits,
+                       {"done": self._done, "results": self._acc},
+                       keep=self.ft.ckpt_keep)
+
+    # -- execution ---------------------------------------------------------
+    def _execute(self, h: int, roots: List[int]):
+        from repro.search.api import _batch_domains, search
+        from repro.search.sharding import shard_search_keys
+        doms = [self.domains[i] for i in roots]
+        keys = self.keys[np.asarray(roots)]
+        hmesh = self._host_mesh(h)
+        if hmesh is not None:
+            return shard_search_keys(doms, self.cfg, keys, mesh=hmesh)
+        make, batched = _batch_domains(doms)
+        if batched is None:
+            return jax.vmap(lambda r: search(doms[0], self.cfg, r))(keys)
+        return jax.vmap(
+            lambda bat, r: search(make(bat), self.cfg, r))(batched, keys)
+
+    def _launch(self, h: int, roots: List[int]) -> None:
+        ft = self.ft
+        self.report.runs[np.asarray(roots)] += 1
+        if (not self._fired["kill"] and ft.kill_host_at_root is not None
+                and ft.kill_host_at_root in roots):
+            self._fired["kill"] = True
+            raise SimulatedFailure(
+                f"injected kill of host {h} at root {ft.kill_host_at_root}")
+        # The watchdog is scoped to this launch (the hosts are simulated on
+        # one driver thread, so a long-lived per-host heartbeat would expire
+        # on every OTHER host while one stalls) and polices the dispatch
+        # window, not device compute: a hung host never issues its launch, a
+        # healthy one beats immediately — compile time must not look like a
+        # hang under the short watchdogs the deterministic tests use.
+        hb = Heartbeat(ft.watchdog_s)
+        try:
+            if (not self._fired["stall"]
+                    and ft.stall_host_at_root is not None
+                    and ft.stall_host_at_root in roots):
+                self._fired["stall"] = True
+                time.sleep(ft.stall_s or 3.0 * ft.watchdog_s)
+            hb.beat()           # raises WatchdogTimeout if the host stalled
+        finally:
+            hb.stop()
+        self._commit(roots, self._execute(h, roots))
+
+    def _on_host_lost(self, h: int, inflight: List[int]) -> None:
+        self.alive[h] = False
+        self.report.lost_hosts.append(h)
+        survivors = [s for s in range(len(self.alive)) if self.alive[s]]
+        if not survivors:
+            raise RuntimeError(
+                f"all {len(self.alive)} hosts lost; cannot finish "
+                f"{int((~self._done).sum())} roots")
+        victims = [i for i in inflight if not self._done[i]]
+        self._requeues[np.asarray(victims, int)] += 1
+        over = [i for i in victims
+                if self._requeues[i] > self.ft.max_requeues]
+        if over:
+            raise RuntimeError(f"roots {over} exceeded max_requeues="
+                               f"{self.ft.max_requeues}")
+        self.report.requeued.extend(victims)
+        # in-flight roots first (they were launched and lost), then the dead
+        # host's unstarted queue; spread over survivors round-robin
+        orphans = victims + [i for i in self.queues[h] if not self._done[i]]
+        self.queues[h] = []
+        if self.ft.requeue_seed is not None:
+            orphans = [orphans[j] for j in np.random.RandomState(
+                self.ft.requeue_seed).permutation(len(orphans))]
+        for j, i in enumerate(orphans):
+            self.queues[survivors[j % len(survivors)]].append(i)
+        self._shrink(h)
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, max_rounds: Optional[int] = None):
+        """Drive every root to a committed result; returns the merged
+        ``SearchResult`` (numpy leaves), bit-for-bit equal per root to the
+        uninterrupted ``search_batch`` run.  ``max_rounds`` bounds the number
+        of scheduling rounds (for restart tests); when it stops early the
+        partial state is committed and ``None`` is returned."""
+        rounds = 0
+        while not self._done.all():
+            if max_rounds is not None and rounds >= max_rounds:
+                return None
+            progressed = False
+            for h in range(len(self.alive)):
+                if not self.alive[h]:
+                    continue
+                queue = [i for i in self.queues[h] if not self._done[i]]
+                take = self.ft.chunk or len(queue)
+                roots, self.queues[h] = queue[:take], queue[take:]
+                if not roots:
+                    continue
+                progressed = True
+                try:
+                    self._launch(h, roots)
+                except (SimulatedFailure, WatchdogTimeout):
+                    self._on_host_lost(h, roots)
+            rounds += 1
+            self.report.rounds = rounds
+            if not progressed:
+                raise RuntimeError("no progress: live hosts have empty "
+                                   "queues but roots remain")
+        return self.result()
+
+    def result(self):
+        """Merged result for the committed roots (full ``SearchResult`` once
+        ``run()`` finished)."""
+        if self._acc is None:
+            raise RuntimeError("no roots committed yet")
+        return self._acc
+
+
+def ft_search_batch(domains, cfg, rng, *,
+                    ft: Optional[FTSearchConfig] = None, mesh=None):
+    """``search_batch`` under the elastic driver: same per-root results
+    (bit-for-bit, even across injected host loss), committed through the
+    checkpoint store when ``ft.ckpt_dir`` is set."""
+    return ElasticSearchDriver(domains, cfg, rng, ft, mesh=mesh).run()

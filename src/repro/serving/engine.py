@@ -145,6 +145,28 @@ class ServingEngine:
             self.prefix_len[i] = 0
         # greedy: the KV row is dead weight until the slot is refilled
 
+    def shrink(self, lost_slots) -> List[int]:
+        """Elastic shrink event (DESIGN.md §13): a lost host's slots are
+        evicted-and-requeued through the scheduler — victims keep their
+        committed tokens and FCFS position, exactly like priority preemption
+        — and removed from the admission pool for good.  Surviving slots are
+        refilled immediately, so the engine keeps serving at the shrunken
+        batch.  Returns the slots that actually held a live request."""
+        lost = sorted({int(s) for s in lost_slots})
+        newly = [s for s in lost if not self.sched.is_disabled(s)]
+        if self.sched.num_enabled() - len(newly) < 1:
+            raise ValueError("shrink would disable every slot; at least one "
+                             "must survive to keep serving")
+        evicted = []
+        for s in lost:
+            ev = self.sched.evict(s)
+            if ev is not None:
+                self._on_evict(ev.slot, ev.req)
+                evicted.append(s)
+        self.sched.disable(lost)
+        self._admit_loop()
+        return evicted
+
     def _finish(self, i: int, req: Request):
         req.done = True
         req.finish_t = self.stats.now()

@@ -10,7 +10,10 @@ carry) and reacts to the scheduler's events.
 State machine per slot::
 
     free --admit--> live --retire--> free     (finished: budget / EOS / capacity)
-                      '--evict--> requeued    (preempted by higher priority)
+                      '--evict--> requeued    (preempted by higher priority,
+                                               or forced by an elastic shrink;
+                                               ``disable`` then retires the
+                                               slot from the pool for good)
 
 * **Admission policy** (``policy=``): ``"fcfs"`` admits in arrival order,
   ``"spf"`` shortest-prompt-first (by *effective* prefix — prompt plus
@@ -92,6 +95,7 @@ class RequestScheduler:
         # _live is the authoritative occupancy bit
         self._slots: List[Optional[Request]] = [None] * num_slots
         self._live = [False] * num_slots
+        self._disabled = [False] * num_slots
         self.remaining = np.zeros(num_slots, np.int64)
         self._queue: List[Request] = []
         self._seq = 0
@@ -143,6 +147,32 @@ class RequestScheduler:
         self._live[slot] = False
         self.remaining[slot] = 0
 
+    def evict(self, slot: int) -> Optional[Evict]:
+        """Forced eviction of one slot (elastic shrink, DESIGN.md §13):
+        live -> requeued with committed tokens and FCFS seq intact — the
+        same contract as priority preemption, but driven by the world
+        changing instead of by a better candidate.  No-op on a free slot."""
+        if not self._live[slot]:
+            return None
+        victim = self._slots[slot]
+        self._live[slot] = False
+        self.remaining[slot] = 0
+        self._queue.append(victim)
+        return Evict(slot, victim)
+
+    def disable(self, slots) -> None:
+        """Remove slots from the admission pool (a lost host's slots after a
+        shrink).  Disabled slots are never admitted to again; live requests
+        on them must be ``evict``-ed by the caller first."""
+        for s in slots:
+            self._disabled[s] = True
+
+    def num_enabled(self) -> int:
+        return sum(not d for d in self._disabled)
+
+    def is_disabled(self, slot: int) -> bool:
+        return self._disabled[slot]
+
     def _victim(self) -> Optional[int]:
         """Lowest-priority live slot; ties broken by least progress (fewest
         committed tokens — cheapest to redo), then slot index."""
@@ -162,7 +192,8 @@ class RequestScheduler:
                      key=lambda j: self._order_key(self._queue[j]))
             cand = self._queue[qi]
             slot = next((i for i in range(self.num_slots)
-                         if not self._live[i]), None)
+                         if not self._live[i] and not self._disabled[i]),
+                        None)
             if slot is None:
                 v = self._victim()
                 # candidates are ordered priority-first, so if the best one

@@ -1,0 +1,160 @@
+"""checkpoint/store.py unit coverage (ISSUE 7 satellite): atomic save under
+injected kills, keep-N pruning, and restore-latest of search-result pytrees.
+The module had never been exercised by tier-1 before the elastic driver
+started committing per-root results through it (DESIGN.md §13)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def _result_tree(b=4, a=3, scale=1.0):
+    """A search-result-shaped pytree (the elastic driver's commit payload)."""
+    return {
+        "done": np.array([True, False, True, False][:b]),
+        "results": {
+            "action_visits": (np.arange(b * a).reshape(b, a) * scale)
+            .astype(np.int32),
+            "action_value": np.linspace(0, scale, b * a, dtype=np.float32)
+            .reshape(b, a),
+            "best_action": np.arange(b, dtype=np.int32),
+            "stats": {"playouts": np.full((b,), 32, np.int32),
+                      "ticks": np.full((b,), 9, np.int32)},
+        },
+    }
+
+
+def _like(tree):
+    import jax
+    return jax.tree_util.tree_map(lambda x: np.zeros_like(x), tree)
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = _result_tree()
+    store.save(d, 1, tree)
+    assert store.latest_step(d) == 1
+    out = store.restore(d, 1, _like(tree))
+    import jax
+    jax.tree_util.tree_map(np.testing.assert_array_equal, out, tree)
+
+
+def test_bf16_leaves_roundtrip(tmp_path):
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    d = str(tmp_path)
+    tree = {"x": np.arange(6, dtype=np.float32).astype(ml_dtypes.bfloat16)}
+    store.save(d, 1, tree)
+    out = store.restore(d, 1, {"x": np.zeros(6, ml_dtypes.bfloat16)})
+    assert out["x"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(out["x"].astype(np.float32),
+                                  tree["x"].astype(np.float32))
+
+
+def test_kill_mid_write_never_tears_the_latest(tmp_path, monkeypatch):
+    """An injected kill mid-save leaves the previous checkpoint committed and
+    readable; the half-written step is invisible and a retry succeeds."""
+    d = str(tmp_path)
+    t1 = _result_tree(scale=1.0)
+    t2 = _result_tree(scale=2.0)
+    store.save(d, 1, t1)
+
+    real_save = np.save
+    calls = {"n": 0}
+
+    def dying_save(path, arr, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:                 # die after the first leaf lands
+            raise KeyboardInterrupt("injected kill mid-write")
+        return real_save(path, arr, **kw)
+
+    monkeypatch.setattr(np, "save", dying_save)
+    with pytest.raises(KeyboardInterrupt):
+        store.save(d, 2, t2)
+    monkeypatch.setattr(np, "save", real_save)
+
+    # the torn step never became visible; step 1 is intact
+    assert store.latest_step(d) == 1
+    out = store.restore(d, 1, _like(t1))
+    np.testing.assert_array_equal(out["results"]["action_visits"],
+                                  t1["results"]["action_visits"])
+    with pytest.raises(FileNotFoundError):
+        store.restore(d, 2, _like(t2))
+    # a retry of the same step commits cleanly over the stale tmp dir
+    store.save(d, 2, t2)
+    assert store.latest_step(d) == 2
+    out2 = store.restore(d, 2, _like(t2))
+    np.testing.assert_array_equal(out2["results"]["action_value"],
+                                  t2["results"]["action_value"])
+
+
+def test_kill_between_rename_and_commit_marker(tmp_path, monkeypatch):
+    """Dying after the rename but before the COMMITTED marker leaves an
+    uncommitted dir that latest_step/restore ignore, and a later save reaps."""
+    d = str(tmp_path)
+    store.save(d, 1, _result_tree())
+    real_open = open
+    step2 = os.path.join(d, "step_00000002")
+
+    import builtins
+
+    def dying_open(path, *a, **kw):
+        if isinstance(path, str) and path == os.path.join(step2,
+                                                          store.COMMITTED):
+            raise KeyboardInterrupt("injected kill before commit marker")
+        return real_open(path, *a, **kw)
+
+    monkeypatch.setattr(builtins, "open", dying_open)
+    with pytest.raises(KeyboardInterrupt):
+        store.save(d, 2, _result_tree(scale=2.0))
+    monkeypatch.setattr(builtins, "open", real_open)
+    assert os.path.isdir(step2)                 # renamed, but not committed
+    assert store.latest_step(d) == 1
+    store.save(d, 3, _result_tree(scale=3.0))  # next save reaps the debris
+    assert not os.path.isdir(step2)
+    assert store.latest_step(d) == 3
+
+
+def test_keep_n_pruning(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 6):
+        store.save(d, s, _result_tree(scale=float(s)), keep=2)
+    assert sorted(store._committed_steps(d)) == [4, 5]
+    assert store.latest_step(d) == 5
+    # the survivors are the two NEWEST and still restore correctly
+    out = store.restore(d, 4, _like(_result_tree()))
+    np.testing.assert_array_equal(
+        out["results"]["action_visits"],
+        _result_tree(scale=4.0)["results"]["action_visits"])
+
+
+def test_stale_tmp_dirs_are_reaped(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_00000007.tmp"))
+    store.save(d, 1, _result_tree())
+    assert not os.path.exists(os.path.join(d, "step_00000007.tmp"))
+
+
+def test_restore_structure_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    store.save(d, 1, _result_tree())
+    with pytest.raises(ValueError, match="leaves"):
+        store.restore(d, 1, {"just_one": np.zeros((4, 3), np.int32)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        bad = _result_tree()
+        bad["results"]["action_visits"] = np.zeros((9, 9), np.int32)
+        store.restore(d, 1, bad)
+
+
+def test_manager_restore_latest(tmp_path):
+    mgr = store.CheckpointManager(str(tmp_path), keep=3, every=1)
+    tree = _result_tree()
+    assert mgr.latest() is None
+    step, state = mgr.restore_latest(_like(tree))
+    assert step is None and state is None
+    assert mgr.maybe_save(5, tree)
+    mgr.wait()
+    step, state = mgr.restore_latest(_like(tree))
+    assert step == 5
+    np.testing.assert_array_equal(state["done"], tree["done"])

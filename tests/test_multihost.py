@@ -1,0 +1,110 @@
+"""Real multi-process ``jax.distributed`` CPU tests (DESIGN.md §13).
+
+Two worker processes (4 forced host devices each -> an 8-device global
+world) are launched via subprocess, initialize through
+``compat.init_distributed_cpu`` (gloo CPU collectives), and run the
+multi-host ``shard_search_batch`` path for real: global input placement via
+``make_array_from_callback``, communication-free per-root programs, and the
+cross-process all-gather of the results.  Every process asserts per-root
+parity against single-process ``search`` — the same oracle as
+tests/test_sharding.py — plus a killed-worker elastic run that completes
+with only the victim's in-flight roots requeued.
+
+The workers self-provision their devices, so this runs everywhere the
+repo's other subprocess tests do (always-run in CI's chaos job).
+"""
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
+WORKER = textwrap.dedent("""
+    import os, sys
+    pid, port = int(sys.argv[1]), sys.argv[2]
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    from repro.parallel.compat import init_distributed_cpu, mesh_is_multihost
+    init_distributed_cpu(f"localhost:{port}", 2, pid)
+    import numpy as np
+    assert jax.process_count() == 2
+    assert jax.device_count() == 8 and jax.local_device_count() == 4
+
+    from repro.core.domains.pgame import PGameDomain
+    from repro.launch.mesh import make_search_mesh
+    from repro.search import (ElasticSearchDriver, FTSearchConfig,
+                              SearchConfig, SearchParams, search,
+                              search_batch, shard_search_batch)
+    DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False,
+                      seed=3)
+    cfg = SearchConfig(method="pipeline", budget=32, lanes=4,
+                       params=SearchParams(cp=0.7, max_depth=6),
+                       keep_tree=False)
+    rng = jax.random.key(7)
+
+    # 1) multi-host shard_search_batch == single-process search, per root.
+    #    B=5 exercises the padding contract across the host boundary.
+    mesh = make_search_mesh()
+    assert mesh_is_multihost(mesh)
+    res = shard_search_batch([DOM] * 5, cfg, rng, mesh=mesh)
+    keys = jax.random.split(rng, 5)
+    for i in range(5):
+        ind = search(DOM, cfg, keys[i])
+        np.testing.assert_array_equal(np.asarray(res.action_visits[i]),
+                                      np.asarray(ind.action_visits))
+        np.testing.assert_allclose(np.asarray(res.action_value[i]),
+                                   np.asarray(ind.action_value), rtol=1e-5)
+        for k in res.stats:
+            assert int(res.stats[k][i]) == int(ind.stats[k])
+    print(pid, "PARITY OK", flush=True)
+
+    # 2) killed-worker elastic run: logical host 1 (this job's second
+    #    process share) dies launching roots [3, 4]; the run completes with
+    #    ONLY those in-flight roots requeued, identical merged results on
+    #    every process (the drivers run in deterministic lockstep).
+    base = search_batch([DOM] * 6, cfg, rng, mesh=False)
+    drv = ElasticSearchDriver(
+        [DOM] * 6, cfg, rng,
+        FTSearchConfig(hosts=2, chunk=2, watchdog_s=0.1,
+                       kill_host_at_root=4))
+    out = drv.run()
+    np.testing.assert_array_equal(np.asarray(out.action_visits),
+                                  np.asarray(base.action_visits))
+    np.testing.assert_array_equal(np.asarray(out.action_value),
+                                  np.asarray(base.action_value))
+    assert drv.report.lost_hosts == [1], drv.report
+    assert sorted(drv.report.requeued) == [3, 4], drv.report
+    assert all(drv.report.runs[i] == (2 if i in (3, 4) else 1)
+               for i in range(6)), drv.report
+    print(pid, "KILLED-WORKER OK", flush=True)
+""")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def test_two_process_multihost_search():
+    port = _free_port()
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+           "HOME": os.environ.get("HOME", "/root")}
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", WORKER, str(pid), str(port)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+        for pid in (0, 1)]
+    outs = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=600)
+            outs.append(out)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    for pid, (p, out) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, f"worker {pid}:\n{out[-3000:]}"
+        assert f"{pid} PARITY OK" in out
+        assert f"{pid} KILLED-WORKER OK" in out

@@ -236,3 +236,64 @@ def test_data_pipeline_deterministic(step, seed):
     # different steps differ
     b3 = synthetic_batch(cfg, d, step + 1)
     assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# elastic requeue/merge invariance (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+_FT_B = 6
+_ft_state = {}
+
+
+def _ft_fixtures():
+    """Baseline computed once: the uninterrupted search_batch oracle."""
+    if not _ft_state:
+        from repro.core.domains.pgame import PGameDomain
+        from repro.search import (SearchConfig, SearchParams, search_batch)
+        dom = PGameDomain(num_actions=3, game_depth=4, binary_reward=False,
+                          seed=5)
+        cfg = SearchConfig(method="root", budget=16, lanes=2,
+                           params=SearchParams(cp=0.7, max_depth=4),
+                           keep_tree=False)
+        rng = jax.random.key(13)
+        _ft_state.update(dom=dom, cfg=cfg, rng=rng,
+                         base=search_batch([dom] * _FT_B, cfg, rng,
+                                           mesh=False))
+    return _ft_state
+
+
+@settings(max_examples=12, deadline=None)
+@given(hosts=st.integers(1, 4), chunk=st.integers(0, 3),
+       kill=st.one_of(st.none(), st.integers(0, _FT_B - 1)),
+       partition_seed=st.one_of(st.none(), st.integers(0, 10)),
+       requeue_seed=st.one_of(st.none(), st.integers(0, 10)))
+def test_elastic_merge_is_partition_and_failure_invariant(
+        hosts, chunk, kill, partition_seed, requeue_seed):
+    """For random root->host partitions, failure points, and requeue orders,
+    merge(surviving ∪ requeued) is bitwise the no-failure run: same visits,
+    values, and stats per root."""
+    from hypothesis import assume
+
+    from repro.search import ElasticSearchDriver, FTSearchConfig
+    assume(not (hosts == 1 and kill is not None))   # no survivor would remain
+    st_ = _ft_fixtures()
+    drv = ElasticSearchDriver(
+        [st_["dom"]] * _FT_B, st_["cfg"], st_["rng"],
+        FTSearchConfig(hosts=hosts, chunk=chunk, watchdog_s=0.05,
+                       kill_host_at_root=kill, partition_seed=partition_seed,
+                       requeue_seed=requeue_seed))
+    res = drv.run()
+    base = st_["base"]
+    np.testing.assert_array_equal(np.asarray(res.action_visits),
+                                  np.asarray(base.action_visits))
+    np.testing.assert_array_equal(np.asarray(res.action_value),
+                                  np.asarray(base.action_value))
+    for k in base.stats:
+        np.testing.assert_array_equal(np.asarray(res.stats[k]),
+                                      np.asarray(base.stats[k]))
+    if kill is not None:
+        assert len(drv.report.lost_hosts) == 1
+        assert kill in drv.report.requeued
+        assert int(drv.report.runs.max()) <= 2
+    else:
+        assert all(drv.report.runs == 1)

@@ -1,0 +1,273 @@
+"""Deterministic fault-injection suite for the elastic search driver
+(DESIGN.md §13).
+
+Every scenario is driven through ``FTSearchConfig``'s injection knobs
+(``kill_host_at_root`` / ``stall_host_at_root``) and checked against the
+ORACLE: the uninterrupted ``search_batch`` run.  The paper's root
+parallelism makes the invariant exact — each root's result depends only on
+its own (domain, key), so requeue + merge must be bit-for-bit identical to
+a run where nothing failed.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.domains.pgame import PGameDomain
+from repro.search import (ElasticSearchDriver, FTSearchConfig, SearchConfig,
+                          SearchParams, STATS_KEYS, ft_search_batch,
+                          search_batch)
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
+SP = SearchParams(cp=0.7, max_depth=6)
+METHODS = ("sequential", "root", "leaf", "tree", "pipeline")
+B = 6
+FAST = dict(watchdog_s=0.05)     # watchdog small so stall tests stay quick
+
+_baselines = {}
+
+
+def _cfg(method):
+    return SearchConfig(method=method, budget=32, lanes=4, params=SP,
+                        keep_tree=False)
+
+
+def _baseline(method):
+    if method not in _baselines:
+        _baselines[method] = search_batch(
+            [DOM] * B, _cfg(method), jax.random.key(7), mesh=False)
+    return _baselines[method]
+
+
+def _assert_bitwise(res, ref):
+    np.testing.assert_array_equal(np.asarray(res.action_visits),
+                                  np.asarray(ref.action_visits))
+    np.testing.assert_array_equal(np.asarray(res.action_value),
+                                  np.asarray(ref.action_value))
+    np.testing.assert_array_equal(np.asarray(res.best_action),
+                                  np.asarray(ref.best_action))
+    for k in STATS_KEYS:
+        np.testing.assert_array_equal(np.asarray(res.stats[k]),
+                                      np.asarray(ref.stats[k]))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_killed_host_merges_bitwise(method):
+    """Kill the host that owns root 4 as it launches: the merged result is
+    bit-for-bit the uninterrupted run, only the victim's in-flight roots ran
+    twice, and the dead host stays dead."""
+    drv = ElasticSearchDriver(
+        [DOM] * B, _cfg(method), jax.random.key(7),
+        FTSearchConfig(hosts=3, chunk=1, kill_host_at_root=4, **FAST))
+    res = drv.run()
+    _assert_bitwise(res, _baseline(method))
+    assert drv.report.lost_hosts == [2]          # blocks of 2: root 4 -> host 2
+    assert drv.report.requeued == [4]
+    runs = drv.report.runs
+    assert runs[4] == 2 and all(runs[i] == 1 for i in range(B) if i != 4)
+    assert drv.alive == [True, True, False]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_stalled_host_merges_bitwise(method):
+    """A host hung past the watchdog is declared lost by the Heartbeat and
+    treated exactly like a kill: requeue its in-flight chunk, same merge."""
+    drv = ElasticSearchDriver(
+        [DOM] * B, _cfg(method), jax.random.key(7),
+        FTSearchConfig(hosts=2, chunk=2, stall_host_at_root=1, **FAST))
+    res = drv.run()
+    _assert_bitwise(res, _baseline(method))
+    assert drv.report.lost_hosts == [0]
+    assert sorted(drv.report.requeued) == [0, 1]  # the in-flight chunk
+    runs = drv.report.runs
+    assert runs[0] == 2 and runs[1] == 2
+    assert all(runs[i] == 1 for i in range(2, B))
+
+
+def test_requeued_roots_run_at_most_once_extra():
+    """Whole-queue chunks: a kill requeues the host's entire in-flight set;
+    every victim runs exactly twice, everything else exactly once."""
+    drv = ElasticSearchDriver(
+        [DOM] * B, _cfg("pipeline"), jax.random.key(7),
+        FTSearchConfig(hosts=2, chunk=0, kill_host_at_root=3, **FAST))
+    res = drv.run()
+    _assert_bitwise(res, _baseline("pipeline"))
+    victims = set(drv.report.requeued)
+    assert victims == {3, 4, 5}                  # host 1's whole queue
+    assert all(drv.report.runs[i] == (2 if i in victims else 1)
+               for i in range(B))
+    assert int(drv.report.runs.max()) == 2
+
+
+def test_failure_point_never_reached_is_noop():
+    """A failure configured past the last root is never triggered: no lost
+    hosts, no requeues, every root runs exactly once."""
+    drv = ElasticSearchDriver(
+        [DOM] * B, _cfg("sequential"), jax.random.key(7),
+        FTSearchConfig(hosts=2, kill_host_at_root=B + 17, **FAST))
+    res = drv.run()
+    _assert_bitwise(res, _baseline("sequential"))
+    assert drv.report.lost_hosts == [] and drv.report.requeued == []
+    assert all(drv.report.runs == 1)
+
+
+def test_failure_after_last_commit_is_noop(tmp_path):
+    """Once every root is committed, a configured failure can never fire: a
+    restarted driver with a kill injection resumes from the checkpoint,
+    launches nothing, loses nothing, and returns the same merged result."""
+    ckpt = dict(ckpt_dir=str(tmp_path), **FAST)
+    first = ElasticSearchDriver([DOM] * B, _cfg("tree"), jax.random.key(7),
+                                FTSearchConfig(hosts=2, **ckpt))
+    res1 = first.run()
+    again = ElasticSearchDriver(
+        [DOM] * B, _cfg("tree"), jax.random.key(7),
+        FTSearchConfig(hosts=2, kill_host_at_root=2, **ckpt))
+    res2 = again.run()
+    _assert_bitwise(res2, res1)
+    _assert_bitwise(res2, _baseline("tree"))
+    assert again.report.resumed == list(range(B))
+    assert all(again.report.runs == 0)
+    assert again.report.lost_hosts == [] and again.report.requeued == []
+
+
+def test_driver_restart_resumes_from_committed_roots(tmp_path):
+    """A driver restart (fresh process image, same ckpt_dir) re-runs only the
+    uncommitted roots and merges to the uninterrupted result."""
+    ft = FTSearchConfig(hosts=2, chunk=2, ckpt_dir=str(tmp_path), **FAST)
+    d1 = ElasticSearchDriver([DOM] * B, _cfg("pipeline"), jax.random.key(7),
+                             ft)
+    assert d1.run(max_rounds=1) is None          # "crash" after one round
+    committed = set(np.nonzero(d1._done)[0].tolist())
+    assert 0 < len(committed) < B
+    d2 = ElasticSearchDriver([DOM] * B, _cfg("pipeline"), jax.random.key(7),
+                             ft)
+    res = d2.run()
+    _assert_bitwise(res, _baseline("pipeline"))
+    assert set(d2.report.resumed) == committed
+    assert all(d2.report.runs[i] == 0 for i in committed)
+    assert all(d2.report.runs[i] == 1 for i in range(B)
+               if i not in committed)
+
+
+def test_losing_every_host_raises():
+    with pytest.raises(RuntimeError, match="hosts lost"):
+        ft_search_batch([DOM] * 2, _cfg("sequential"), jax.random.key(7),
+                        ft=FTSearchConfig(hosts=1, kill_host_at_root=0,
+                                          **FAST))
+
+
+def test_varying_domains_and_stats_survive_failure():
+    """Per-root varying fields ride through requeue/merge unchanged, and the
+    full stats schema matches the oracle."""
+    doms = [PGameDomain(num_actions=4, game_depth=6, binary_reward=True,
+                        seed=3, threshold=t)
+            for t in (0.3, 0.4, 0.5, 0.6, 0.7)]
+    cfg = _cfg("root")
+    rng = jax.random.key(11)
+    base = search_batch(doms, cfg, rng, mesh=False)
+    drv = ElasticSearchDriver(
+        doms, cfg, rng,
+        FTSearchConfig(hosts=2, chunk=2, kill_host_at_root=3, **FAST))
+    _assert_bitwise(drv.run(), base)
+    assert sorted(drv.report.requeued) == [3, 4]  # the in-flight chunk
+
+
+# -- serving: the shrink event goes through the PR 6 scheduler --------------
+def test_engine_shrink_evicts_and_requeues_keeping_committed():
+    from repro.models.base import ModelConfig, get_family
+    from repro.serving import MCTSDecodeConfig
+    from repro.serving.engine import EngineConfig, ServingEngine
+    from repro.serving.scheduler import Request
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", ce_chunk=8, remat=False)
+    params = get_family(cfg).init(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=4, max_seq=32, decode="mcts",
+        mcts=MCTSDecodeConfig(num_actions=3, budget=6, lanes=2,
+                              search_depth=2, rollout_len=1), mesh=False))
+    for u in range(5):
+        eng.submit(Request(uid=u, prompt=np.array([1 + u, 2], np.int32),
+                           max_new_tokens=6))
+    eng.step()
+    eng.step()
+    victims = {i: eng.sched.request(i) for i in (0, 1)
+               if eng.sched.is_live(i)}
+    committed = {i: list(r.out_tokens) for i, r in victims.items()}
+    evicted = eng.shrink([0, 1])                 # a lost host owned slots 0-1
+    assert sorted(evicted) == sorted(victims)
+    assert set(eng.sched.live()) <= {2, 3}       # re-placed onto survivors
+    assert eng.sched.is_disabled(0) and eng.sched.is_disabled(1)
+    out = eng.run_until_drained()
+    for i, req in victims.items():
+        assert req.done and len(req.out_tokens) == 6
+        assert req.out_tokens[:len(committed[i])] == committed[i]
+    assert int(out["stats"]["serving/preemptions"]) >= len(victims)
+    # the pool never admits to a disabled slot again
+    assert all(not eng.sched.is_live(s) for s in (0, 1))
+
+
+def test_engine_shrink_to_zero_slots_rejected():
+    from repro.models.base import ModelConfig, get_family
+    from repro.serving.engine import EngineConfig, ServingEngine
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", ce_chunk=8, remat=False)
+    params = get_family(cfg).init(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_seq=16))
+    with pytest.raises(ValueError, match="survive"):
+        eng.shrink([0, 1])
+    eng.shrink([0])
+    with pytest.raises(ValueError, match="survive"):
+        eng.shrink([1])
+
+
+# -- always-run: the sharded elastic path on 8 fake devices -----------------
+def test_ft_mesh_shrink_subprocess_8dev():
+    """Single-device sessions: kill a host owning half an 8-device mesh; the
+    survivors' shrunken world still merges bit-for-bit (the pattern of
+    tests/test_sharding.py)."""
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.core.domains.pgame import PGameDomain
+        from repro.launch.mesh import make_search_mesh
+        from repro.search import (ElasticSearchDriver, FTSearchConfig,
+                                  SearchConfig, SearchParams, search_batch)
+        assert jax.device_count() == 8
+        DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False,
+                          seed=3)
+        cfg = SearchConfig(method="pipeline", budget=32, lanes=4,
+                           params=SearchParams(cp=0.7, max_depth=6),
+                           keep_tree=False)
+        rng = jax.random.key(42)
+        base = search_batch([DOM] * 10, cfg, rng, mesh=False)
+        drv = ElasticSearchDriver(
+            [DOM] * 10, cfg, rng,
+            FTSearchConfig(hosts=2, chunk=4, watchdog_s=0.1,
+                           kill_host_at_root=6),
+            mesh=make_search_mesh())
+        res = drv.run()
+        np.testing.assert_array_equal(np.asarray(res.action_visits),
+                                      np.asarray(base.action_visits))
+        np.testing.assert_array_equal(np.asarray(res.action_value),
+                                      np.asarray(base.action_value))
+        assert drv.report.lost_hosts == [1]
+        # host 1's devices are gone; the survivor owns the shrunken world
+        worlds = [len(d or []) for d in drv._host_devices]
+        assert worlds == [4, 0], worlds
+        print("OK")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "JAX_PLATFORMS": "cpu",
+             "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "OK" in r.stdout
