@@ -47,16 +47,53 @@ def _select_stage_us(ws: str, lanes: int, tree, n_waves: int = 100) -> float:
     sp = dataclasses.replace(SP, wave_select=ws)
 
     def body(i, acc):
-        t2 = dict(tree)
         # per-iteration perturbation defeats loop-invariant hoisting
-        t2["visits"] = tree["visits"].at[0].add(i)
+        t2 = tree.replace(visits=tree.visits.at[0].add(i))
         t3, sel = S.select_wave(t2, sp, lanes, jnp.asarray(True))
-        return acc + sel["leaf"].sum() + t3["vloss"].sum()
+        return acc + sel["leaf"].sum() + t3.vloss.sum()
 
     fn = jax.jit(lambda: jax.lax.fori_loop(0, n_waves, body, jnp.int32(0)))
     fn().block_until_ready()
     best = float("inf")
     for _ in range(5):                # min-of-repeats rides out CPU jitter
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best / n_waves * 1e6
+
+
+def _wave_us(fused: bool, lanes: int, tree, n_waves: int = 100) -> float:
+    """Mean microseconds for one wave of TREE OPS (Select + Expand + Backup,
+    DESIGN.md §14).  Playout is excluded — it is domain work untouched by
+    the fusion — by backing up a constant value/prior instead of rolling
+    out.  ``fused`` runs the megakernel decomposition (one lockstep descent
+    + vectorized structural expand); unfused runs the pre-fusion stages
+    (per-level Select dispatch, per-lane ``lax.scan`` Expand)."""
+    from repro.kernels.search_wave import ref
+    sp = dataclasses.replace(SP, wave_select="lockstep")
+    val = jnp.zeros((lanes,), jnp.float32)
+    pri = jnp.full((lanes, DOM.num_actions), 1.0 / DOM.num_actions,
+                   jnp.float32)
+
+    def body(i, acc):
+        t2 = tree.replace(visits=tree.visits.at[0].add(i))
+        if fused:
+            t3, sel = S.select_wave_fused(t2, sp, lanes, jnp.asarray(True))
+            t3, es = ref.expand_wave_struct(t3, sp, sel)
+            t3, exp = ref.finish_expand(t3, DOM, es)
+        else:
+            t3, sel = S.select_wave(t2, sp, lanes, jnp.asarray(True))
+            t3, exp = S.expand_wave(t3, DOM, sp, sel)
+        po = {"path": exp["path"], "node": exp["node"],
+              "is_new": exp["is_new"], "value": val, "priors": pri,
+              "valid": exp["valid"]}
+        t4 = S.backup_wave(t3, po)
+        return acc + sel["leaf"].sum() + t4.vloss.sum() + t4.visits.sum()
+
+    fn = jax.jit(lambda: jax.lax.fori_loop(0, n_waves, body, jnp.int32(0)))
+    fn().block_until_ready()
+    best = float("inf")
+    for _ in range(5):
         t0 = time.perf_counter()
         fn().block_until_ready()
         best = min(best, time.perf_counter() - t0)
@@ -90,12 +127,23 @@ def _fused_select_rows(report, smoke: bool):
         report(f"select_wave_lockstep_lanes{lanes}", us_lock,
                f"selects/s={lanes / us_lock * 1e6:.0f} "
                f"speedup={us_scan / us_lock:.2f}x one [lanes,A] UCT pass/level")
+    # megakernel gate rows (DESIGN.md §14): tree-op throughput of one fused
+    # wave vs the per-level/per-lane unfused stages, same grown tree
+    lanes = 8
+    us_unf = _wave_us(False, lanes, tree)
+    us_meg = _wave_us(True, lanes, tree)
+    report(f"wave_unfused_lockstep_lanes{lanes}", us_unf,
+           f"playouts/s={lanes / us_unf * 1e6:.0f}")
+    report(f"wave_fused_mega_lanes{lanes}", us_meg,
+           f"playouts/s={lanes / us_meg * 1e6:.0f} "
+           f"speedup={us_unf / us_meg:.2f}x one S+E+B pass/wave")
     lanes, budget, nbatch = 8, 256, (4 if smoke else 8)
     ps_scan = _e2e_playouts_per_s("scan", lanes, budget, nbatch)
     ps_lock = _e2e_playouts_per_s("lockstep", lanes, budget, nbatch)
+    ps_mega = _e2e_playouts_per_s("mega", lanes, budget, nbatch)
     report(f"select_e2e_tree_lanes{lanes}", 1e6 * budget * nbatch / ps_lock,
            f"lockstep={ps_lock:.0f}pl/s scan={ps_scan:.0f}pl/s "
-           f"speedup={ps_lock / ps_scan:.2f}x")
+           f"mega={ps_mega:.0f}pl/s speedup={ps_lock / ps_scan:.2f}x")
 
 
 def run(report, smoke: bool = False):

@@ -51,6 +51,14 @@ class LMDecodeDomain:
                                       # previous token's rerooted subtree
                                       # (cross-token reuse, DESIGN.md §12).
                                       # None searches cold.
+    root_arena: Any = None            # optional carried TreeArena (same
+                                      # capacity as the search's max_nodes):
+                                      # the previous token's rerooted subtree,
+                                      # spliced in wholesale (full subtree
+                                      # reuse, DESIGN.md §14).  None (or
+                                      # root_arena_alive False) searches cold.
+    root_arena_alive: Any = None      # (traced) bool gating root_arena per
+                                      # slot; None means alive.
 
     def __post_init__(self):
         object.__setattr__(self, "_fam", get_family(self.cfg))

@@ -2,37 +2,50 @@
 
 Paper §V-A: Select / Expand / Playout / Backup, with hard OLD dependencies
 S→E→P→B inside one trajectory and soft ILD between trajectories.  Each stage
-here is a pure function (tree, inputs) -> (tree, outputs) so the pipeline
-scheduler can compose them over in-flight waves.
+here is a pure function (tree, inputs) -> (tree, outputs) — the tree is the
+typed ``core.arena.TreeArena`` — so the pipeline scheduler can compose them
+over in-flight waves.
 
 Serial stages (E, B) process a wave's lanes sequentially (scan) — matching
 the paper's serial pipeline stages.  The Playout stage is fully parallel
 (vmap) — the paper's replicated playout stage (Fig. 5).
 
-The Select stage has two implementations behind one dispatcher
-(``select_wave``, knob ``SearchParams.wave_select`` — DESIGN.md §11):
+Kernel/selection knobs (DESIGN.md §11/§14) — one consolidated pair on
+``SearchParams``, threaded down from ``SearchConfig``:
 
-* ``"scan"``     — lane-major: lane i+1 descends after lane i, seeing its
-  virtual loss at every level (the original serial Select stage).
-* ``"lockstep"`` — depth-major: all lanes descend together, one batched
-  ``[lanes, A]`` UCT argmax per tree level (a single Pallas
-  ``uct_argmax_tiles`` launch with ``r = lanes`` when ``use_pallas``),
-  virtual loss applied per level so deeper levels see the whole wave's
-  in-flight counts.  At ``lanes == 1`` the two are bit-for-bit identical.
+* ``kernels`` — "auto" | "pallas" | "ref": which implementation backs the
+  accelerated paths ("auto" resolves to "pallas" on TPU, "ref" elsewhere).
+  The old boolean ``use_pallas`` is accepted and forwarded under a
+  ``DeprecationWarning``.
+* ``wave_select`` — Select-stage iteration order:
+    - "scan"     — lane-major: lane i+1 descends after lane i, seeing its
+      virtual loss at every level (the original serial Select stage);
+    - "lockstep" — depth-major: all lanes descend together, one batched
+      ``[lanes, A]`` UCT argmax per tree level;
+    - "mega"     — the fused select→expand→backup wave
+      (``kernels/search_wave``): the whole lockstep descent plus the
+      structural expand (and the pipeline tick's backup) in one launch
+      against the arena planes, instead of a launch per tree level.
+      Bit-for-bit equal to "lockstep" at ``lanes == 1``.
+    - "auto"     — "mega" when the resolved kernels are Pallas, else "scan"
+      (preserving the historical CPU default).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple
+import warnings
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import uct
+from repro.core.arena import alloc as arena_alloc
 from repro.core.tree import ROOT, UNEXPANDED, Tree, get_state, max_nodes
 
 
-WAVE_SELECT_MODES = ("auto", "scan", "lockstep")
+WAVE_SELECT_MODES = ("auto", "scan", "lockstep", "mega")
+KERNEL_MODES = ("auto", "pallas", "ref")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,17 +54,43 @@ class SearchParams:
     vl_weight: float = 1.0
     max_depth: int = 32
     puct: bool = False
-    use_pallas: bool = False
-    # Select-stage iteration order (DESIGN.md §11): "scan" descends lanes one
-    # after another (lane-major), "lockstep" descends all lanes together with
-    # one batched UCT pass per tree level (depth-major).  "auto" resolves to
-    # "lockstep" when ``use_pallas`` (the batched kernel launch is the point)
-    # and to "scan" otherwise, preserving the historical default.
+    # Which implementation backs the accelerated paths ("auto" -> "pallas"
+    # on TPU, "ref" elsewhere).  One knob for the per-level UCT kernel and
+    # the fused search-wave megakernel alike.
+    kernels: str = "auto"
+    # Select-stage iteration order (see module docstring).
     wave_select: str = "auto"
+    # DEPRECATED: the old boolean kernel switch.  Accepted and forwarded
+    # into ``kernels`` ("pallas"/"ref") when ``kernels`` is left at "auto".
+    use_pallas: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.use_pallas is not None:
+            warnings.warn(
+                "SearchParams.use_pallas is deprecated; use "
+                "kernels='pallas'|'ref' (forwarding "
+                f"use_pallas={self.use_pallas!r})", DeprecationWarning,
+                stacklevel=2)
+            if self.kernels == "auto":
+                object.__setattr__(
+                    self, "kernels", "pallas" if self.use_pallas else "ref")
 
     @property
     def path_len(self) -> int:
         return self.max_depth + 2          # root .. deepest leaf + expanded child
+
+    @property
+    def resolved_kernels(self) -> str:
+        if self.kernels not in KERNEL_MODES:
+            raise ValueError(
+                f"kernels must be one of {KERNEL_MODES}, got {self.kernels!r}")
+        if self.kernels == "auto":
+            return "pallas" if jax.default_backend() == "tpu" else "ref"
+        return self.kernels
+
+    @property
+    def pallas_enabled(self) -> bool:
+        return self.resolved_kernels == "pallas"
 
     @property
     def resolved_wave_select(self) -> str:
@@ -60,7 +99,7 @@ class SearchParams:
                 f"wave_select must be one of {WAVE_SELECT_MODES}, "
                 f"got {self.wave_select!r}")
         if self.wave_select == "auto":
-            return "lockstep" if self.use_pallas else "scan"
+            return "mega" if self.pallas_enabled else "scan"
         return self.wave_select
 
 
@@ -105,28 +144,28 @@ def select_one(tree: Tree, sp: SearchParams, valid):
     """Descend from the root; returns (tree+vl, trajectory dict of scalars)."""
     def cond(c):
         node, depth, _ = c
-        fully = (tree["children"][node] >= 0).all()
-        return fully & ~tree["terminal"][node] & (depth < sp.max_depth)
+        fully = (tree.children[node] >= 0).all()
+        return fully & ~tree.terminal[node] & (depth < sp.max_depth)
 
     def body(c):
         node, depth, path = c
-        ch = tree["children"][node]
+        ch = tree.children[node]
         idx = jnp.maximum(ch, 0)
         a = uct.uct_argmax(
-            tree["visits"][idx], tree["value"][idx], tree["vloss"][idx],
-            tree["visits"][node] + tree["vloss"][node], sp.cp,
-            vl_weight=sp.vl_weight, prior=tree["prior"][node],
-            puct=sp.puct, valid=ch >= 0, use_pallas=sp.use_pallas)
+            tree.visits[idx], tree.value[idx], tree.vloss[idx],
+            tree.visits[node] + tree.vloss[node], sp.cp,
+            vl_weight=sp.vl_weight, prior=tree.prior[node],
+            puct=sp.puct, valid=ch >= 0, use_pallas=sp.pallas_enabled)
         nxt = ch[a]
         path = path.at[depth + 1].set(nxt)
         return nxt, depth + 1, path
 
     path0 = jnp.full((sp.path_len,), UNEXPANDED, jnp.int32).at[0].set(ROOT)
     leaf, depth, path = jax.lax.while_loop(cond, body, (jnp.int32(ROOT), jnp.int32(0), path0))
-    dup = (tree["vloss"][leaf] > 0) & valid
+    dup = (tree.vloss[leaf] > 0) & valid
     mask = (path >= 0) & valid
-    tree = dict(tree)
-    tree["vloss"] = tree["vloss"].at[jnp.maximum(path, 0)].add(mask.astype(jnp.int32))
+    tree = tree.replace(
+        vloss=tree.vloss.at[jnp.maximum(path, 0)].add(mask.astype(jnp.int32)))
     sel = {"path": jnp.where(valid, path, UNEXPANDED), "leaf": leaf,
            "depth": depth, "valid": valid, "dup": dup}
     return tree, sel
@@ -147,8 +186,8 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
     """Depth-major lockstep Select (DESIGN.md §11): every loop iteration is
     one tree level, scoring all active lanes' children with a single batched
     ``[lanes, A]`` UCT argmax — one ``uct_argmax_tiles`` launch with
-    ``r = lanes`` when ``use_pallas``, instead of ``lanes`` single-row calls
-    per level.
+    ``r = lanes`` under Pallas kernels, instead of ``lanes`` single-row
+    calls per level.
 
     Virtual loss is applied per level: every selected child gets +1 before
     the next level's scores are computed, so deeper levels see the whole
@@ -161,14 +200,14 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
     valid = jnp.broadcast_to(jnp.asarray(valid, bool), (lanes,))
     nmax = max_nodes(tree)
     rows = jnp.arange(lanes)
-    vloss_pre = tree["vloss"]          # in-flight counts before this wave
+    vloss_pre = tree.vloss            # in-flight counts before this wave
 
     def lane_active(node, depth):
-        fully = (tree["children"][node] >= 0).all(axis=-1)
-        return fully & ~tree["terminal"][node] & (depth < sp.max_depth)
+        fully = (tree.children[node] >= 0).all(axis=-1)
+        return fully & ~tree.terminal[node] & (depth < sp.max_depth)
 
     # root VL up front: the root is on every valid lane's path
-    vloss0 = tree["vloss"].at[ROOT].add(valid.sum().astype(jnp.int32))
+    vloss0 = tree.vloss.at[ROOT].add(valid.sum().astype(jnp.int32))
     node0 = jnp.full((lanes,), ROOT, jnp.int32)
     depth0 = jnp.zeros((lanes,), jnp.int32)
     path0 = jnp.full((lanes, sp.path_len), UNEXPANDED, jnp.int32) \
@@ -180,15 +219,15 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
 
     def body(c):
         vloss, node, depth, path, active = c
-        ch = tree["children"][node]                        # [lanes, A]
+        ch = tree.children[node]                           # [lanes, A]
         idx = jnp.maximum(ch, 0)
         own = active.astype(jnp.int32)                     # own in-flight VL
-        pn = tree["visits"][node] + vloss[node] - own
+        pn = tree.visits[node] + vloss[node] - own
         a = uct.uct_argmax(
-            tree["visits"][idx], tree["value"][idx], vloss[idx],
-            pn, sp.cp, vl_weight=sp.vl_weight, prior=tree["prior"][node],
+            tree.visits[idx], tree.value[idx], vloss[idx],
+            pn, sp.cp, vl_weight=sp.vl_weight, prior=tree.prior[node],
             puct=sp.puct, valid=(ch >= 0) & active[:, None],
-            use_pallas=sp.use_pallas)
+            use_pallas=sp.pallas_enabled)
         nxt = ch[rows, a]
         col = jnp.where(active, depth + 1, sp.path_len)    # OOB -> dropped
         path = path.at[rows, col].set(nxt, mode="drop")
@@ -200,8 +239,7 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
 
     vloss, leaf, depth, path, _ = jax.lax.while_loop(
         cond, body, (vloss0, node0, depth0, path0, active0))
-    tree = dict(tree)
-    tree["vloss"] = vloss
+    tree = tree.replace(vloss=vloss)
     # same meaning as the scan path's dup: the lane's leaf was already
     # in-flight when it arrived — from an earlier unfinished wave, or from a
     # lower-numbered lane of this wave (lockstep lanes at a shared node make
@@ -214,8 +252,11 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
 
 
 def select_wave(tree: Tree, sp: SearchParams, lanes: int, valid):
-    """Dispatch on ``sp.resolved_wave_select`` (static at trace time)."""
-    if sp.resolved_wave_select == "lockstep":
+    """Dispatch on ``sp.resolved_wave_select`` (static at trace time).
+    "mega" at this stage-level granularity descends exactly like
+    "lockstep" — the fusion with expand/backup happens one level up
+    (``mega_round`` / ``mega_tick``)."""
+    if sp.resolved_wave_select in ("lockstep", "mega"):
         return select_wave_fused(tree, sp, lanes, valid)
     return select_wave_scan(tree, sp, lanes, valid)
 
@@ -225,26 +266,27 @@ def select_wave(tree: Tree, sp: SearchParams, lanes: int, valid):
 # ---------------------------------------------------------------------------
 def expand_one(tree: Tree, domain, sp: SearchParams, sel):
     leaf, depth, valid = sel["leaf"], sel["depth"], sel["valid"]
-    row = tree["children"][leaf]
+    row = tree.children[leaf]
     has_slot = (row == UNEXPANDED).any()
-    not_full = tree["next_free"] < max_nodes(tree)
-    can = valid & has_slot & ~tree["terminal"][leaf] & not_full
+    can_try = valid & has_slot & ~tree.terminal[leaf]
+    tree, new, can = arena_alloc(tree, can_try)
     a = jnp.argmax(row == UNEXPANDED).astype(jnp.int32)
-    new = tree["next_free"]
     parent_state = get_state(tree, leaf)
     child_state = domain.step(parent_state, a)
     term = domain.is_terminal(child_state)
 
-    widx = jnp.where(can, new, max_nodes(tree))            # OOB -> dropped
-    tree = dict(tree)
-    tree["children"] = tree["children"].at[jnp.where(can, leaf, max_nodes(tree)), a].set(new, mode="drop")
-    tree["parent"] = tree["parent"].at[widx].set(leaf, mode="drop")
-    tree["action"] = tree["action"].at[widx].set(a, mode="drop")
-    tree["terminal"] = tree["terminal"].at[widx].set(term, mode="drop")
-    tree["vloss"] = tree["vloss"].at[widx].add(1, mode="drop")
-    tree["state"] = jax.tree_util.tree_map(
-        lambda buf, s: buf.at[widx].set(s, mode="drop"), tree["state"], child_state)
-    tree["next_free"] = tree["next_free"] + can.astype(jnp.int32)
+    nmax = max_nodes(tree)
+    state = jax.tree_util.tree_map(
+        lambda buf, s: buf.at[new].set(s, mode="drop"),
+        tree.state, child_state)
+    tree = tree.replace(
+        children=tree.children.at[
+            jnp.where(can, leaf, nmax), a].set(new, mode="drop"),
+        parent=tree.parent.at[new].set(leaf, mode="drop"),
+        action=tree.action.at[new].set(a, mode="drop"),
+        terminal=tree.terminal.at[new].set(term, mode="drop"),
+        vloss=tree.vloss.at[new].add(1, mode="drop"),
+        state=state)
 
     node = jnp.where(can, new, leaf)
     path = sel["path"].at[depth + 1].set(jnp.where(can, new, UNEXPANDED))
@@ -293,11 +335,32 @@ def backup_wave(tree: Tree, po):
     idx = jnp.maximum(paths, 0).reshape(-1)
     m = mask.reshape(-1)
     vals = jnp.broadcast_to(po["value"][:, None], paths.shape).reshape(-1)
-    tree = dict(tree)
-    tree["visits"] = tree["visits"].at[idx].add(m.astype(jnp.int32))
-    tree["value"] = tree["value"].at[idx].add(jnp.where(m, vals, 0.0))
-    tree["vloss"] = tree["vloss"].at[idx].add(-m.astype(jnp.int32))
     # write priors for freshly created nodes
     widx = jnp.where(po["is_new"] & valid, po["node"], max_nodes(tree))
-    tree["prior"] = tree["prior"].at[widx].set(po["priors"], mode="drop")
-    return tree
+    return tree.replace(
+        visits=tree.visits.at[idx].add(m.astype(jnp.int32)),
+        value=tree.value.at[idx].add(jnp.where(m, vals, 0.0)),
+        vloss=tree.vloss.at[idx].add(-m.astype(jnp.int32)),
+        prior=tree.prior.at[widx].set(po["priors"], mode="drop"))
+
+
+# ---------------------------------------------------------------------------
+# MEGA — fused select→expand(→backup) waves (kernels/search_wave, §14)
+# ---------------------------------------------------------------------------
+def mega_round(tree: Tree, domain, sp: SearchParams, lanes: int, valid, rng):
+    """One tree-parallel round as two fused launches: [select→expand] +
+    playout + [backup].  Replaces select_wave + expand_wave's
+    scan-over-lanes with the fused wave; bit-for-bit equal to the lockstep
+    path at ``lanes == 1``.  Returns (tree, sel)."""
+    from repro.kernels.search_wave import ops as wave
+    return wave.tree_round(tree, domain, sp, lanes, valid, rng)
+
+
+def mega_tick(tree: Tree, domain, sp: SearchParams, lanes: int, wave_valid,
+              buf_se, buf_ep, buf_pb, rng):
+    """One pipeline tick as a single fused [backup→expand→select] launch
+    plus the out-of-launch playout and expand-finish (domain model calls
+    cannot run inside a kernel).  Returns (tree, new_se, new_ep, new_pb)."""
+    from repro.kernels.search_wave import ops as wave
+    return wave.pipeline_tick(tree, domain, sp, lanes, wave_valid,
+                              buf_se, buf_ep, buf_pb, rng)

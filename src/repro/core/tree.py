@@ -1,21 +1,17 @@
-"""Structure-of-arrays MCTS search tree (device-resident, pure-functional).
+"""Search-tree API — thin wrappers over the typed ``core.arena.TreeArena``.
 
-The TPU analogue of the paper's lock-free shared tree: every mutation is a
-scatter-add/scatter-set inside jit, so concurrent waves commute by
-construction (backup is an add — order-independent, which is what makes the
-paper's out-of-order nonlinear pipeline sound; see DESIGN.md §2).
+The tree used to be a raw ``Dict[str, Any]`` pytree; it is now the typed
+SoA arena (``repro.core.arena``) with a free-list so rows are recycled
+across a serving request's lifetime.  This module keeps the historical
+entry points (``init_tree`` / ``get_state`` / ``reroot`` /
+``warm_start_root`` / ``check_consistency``) as thin wrappers; dict-style
+``tree["visits"]`` still works for one release via the arena's
+``__getitem__`` deprecation shim.
 
-Layout (N = max_nodes, A = num_actions):
-    visits   [N] i32    visit count n_j
-    value    [N] f32    reward sum  w_j
-    vloss    [N] i32    virtual-loss counters (in-flight trajectories through j)
-    parent   [N] i32    parent index (-1 for root)
-    action   [N] i32    action taken from parent
-    children [N, A] i32 child indices (UNEXPANDED = -1)
-    prior    [N, A] f32 child priors (uniform for plain UCT, policy for PUCT)
-    terminal [N] bool   node is a terminal state
-    state    pytree     per-node domain state, leading dim N
-    next_free scalar i32
+API change (DESIGN.md §14): ``reroot`` now returns the rerooted *arena*
+(the committed child promoted to row 0, abandoned siblings recycled) —
+serving carries the whole subtree across tokens.  The old stat-compacting
+behaviour survives as ``root_carry`` (the ``RootCarry`` warm-start path).
 """
 from __future__ import annotations
 
@@ -24,34 +20,40 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-UNEXPANDED = -1
-ROOT = 0
+from repro.core.arena import (ROOT, UNEXPANDED, TreeArena, init_arena,
+                              live_mask)
+from repro.core.arena import reroot as _arena_reroot
+from repro.core.arena import reroot_ok  # noqa: F401  (re-export)
 
-Tree = Dict[str, Any]
+Tree = TreeArena
 
 
 def init_tree(domain, max_nodes: int) -> Tree:
-    a = domain.num_actions
+    """Build the search tree for ``domain``.
+
+    Starts cold (root = ``domain.root_state()``), then applies the optional
+    cross-token warm-start hooks carried on the domain:
+
+    * ``domain.root_warm``  — a ``RootCarry`` seeding the root's N/W/prior
+      (statistic-level reuse, DESIGN.md §12);
+    * ``domain.root_arena`` — a full carried ``TreeArena`` (same capacity)
+      spliced in wholesale when ``domain.root_arena_alive`` (subtree-level
+      reuse, DESIGN.md §14); when not alive the cold tree is used, making
+      the empty carry bit-for-bit a cold search.
+    """
     root_state = domain.root_state()
-    state = jax.tree_util.tree_map(
-        lambda x: jnp.zeros((max_nodes,) + jnp.shape(x), jnp.asarray(x).dtype)
-        .at[ROOT].set(x), root_state)
-    tree = {
-        "visits": jnp.zeros((max_nodes,), jnp.int32),
-        "value": jnp.zeros((max_nodes,), jnp.float32),
-        "vloss": jnp.zeros((max_nodes,), jnp.int32),
-        "parent": jnp.full((max_nodes,), UNEXPANDED, jnp.int32),
-        "action": jnp.full((max_nodes,), UNEXPANDED, jnp.int32),
-        "children": jnp.full((max_nodes, a), UNEXPANDED, jnp.int32),
-        "prior": jnp.full((max_nodes, a), 1.0 / a, jnp.float32),
-        "terminal": jnp.zeros((max_nodes,), bool)
-        .at[ROOT].set(domain.is_terminal(root_state)),
-        "state": state,
-        "next_free": jnp.asarray(1, jnp.int32),
-    }
+    tree = init_arena(root_state, domain.num_actions, max_nodes,
+                      domain.is_terminal(root_state))
     warm = getattr(domain, "root_warm", None)
     if warm is not None:
         tree = warm_start_root(tree, warm)
+    carried = getattr(domain, "root_arena", None)
+    if carried is not None:
+        alive = getattr(domain, "root_arena_alive", None)
+        alive = jnp.asarray(True if alive is None else alive, bool)
+        tree = jax.tree_util.tree_map(
+            lambda c, f: jnp.where(
+                jnp.reshape(alive, (1,) * jnp.ndim(f)), c, f), carried, tree)
     return tree
 
 
@@ -69,31 +71,38 @@ def empty_root_carry(num_actions: int) -> Dict[str, Any]:
     }
 
 
-def reroot(tree: Tree, action) -> Dict[str, Any]:
+def root_carry(tree: Tree, action) -> Dict[str, Any]:
     """Compact the subtree under root child ``action`` into a ``RootCarry``
     (DESIGN.md §12): the chosen child's N/W, its stored prior row, and its
-    children's N/W.  After committing the child's token this is exactly the
-    statistic set of the next search's root — carried across tokens as a
-    warm start instead of searching cold.  Unvisited slots fall back to the
-    identity carry (uniform prior, zero counts), so rerooting onto an
-    unexpanded child degrades gracefully to cold."""
+    children's N/W — the statistic-level warm start (``warm_start_root``).
+    Unvisited slots fall back to the identity carry.  For full subtree
+    reuse use ``reroot``, which keeps the whole arena."""
     a = num_actions(tree)
-    c = tree["children"][ROOT][action]
+    c = tree.children[ROOT][action]
     has = c >= 0
     ci = jnp.maximum(c, 0)
-    gch = tree["children"][ci]                       # grandchildren [A]
+    gch = tree.children[ci]                          # grandchildren [A]
     gvalid = (gch >= 0) & has
     gi = jnp.maximum(gch, 0)
     return {
-        "visits": jnp.where(has, tree["visits"][ci], 0).astype(jnp.int32),
-        "value": jnp.where(has, tree["value"][ci], 0.0).astype(jnp.float32),
-        "prior": jnp.where(has, tree["prior"][ci],
+        "visits": jnp.where(has, tree.visits[ci], 0).astype(jnp.int32),
+        "value": jnp.where(has, tree.value[ci], 0.0).astype(jnp.float32),
+        "prior": jnp.where(has, tree.prior[ci],
                            jnp.full((a,), 1.0 / a, jnp.float32)),
-        "child_visits": jnp.where(gvalid, tree["visits"][gi],
+        "child_visits": jnp.where(gvalid, tree.visits[gi],
                                   0).astype(jnp.int32),
-        "child_value": jnp.where(gvalid, tree["value"][gi],
+        "child_value": jnp.where(gvalid, tree.value[gi],
                                  0.0).astype(jnp.float32),
     }
+
+
+def reroot(tree: Tree, action) -> Tree:
+    """Promote root child ``action`` to the root and recycle the abandoned
+    rows (``core.arena.reroot``).  Returns the rerooted arena — the next
+    search's ready-made tree.  Note: carried ``terminal`` flags reflect the
+    *previous* horizon; callers re-deriving the horizon (serving) refresh
+    them against the new domain (DESIGN.md §14)."""
+    return _arena_reroot(tree, action)
 
 
 def warm_start_root(tree: Tree, carry: Dict[str, Any]) -> Tree:
@@ -105,55 +114,56 @@ def warm_start_root(tree: Tree, carry: Dict[str, Any]) -> Tree:
     is bit-for-bit the identity: ``(prior + 0) / (1 + 0) == prior``."""
     cv = carry["child_visits"].astype(jnp.float32)
     prior = (carry["prior"] + cv) / (1.0 + cv.sum())
-    tree = dict(tree)
-    tree["visits"] = tree["visits"].at[ROOT].set(
-        carry["visits"].astype(jnp.int32))
-    tree["value"] = tree["value"].at[ROOT].set(
-        carry["value"].astype(jnp.float32))
-    tree["prior"] = tree["prior"].at[ROOT].set(prior)
-    return tree
+    return tree.replace(
+        visits=tree.visits.at[ROOT].set(carry["visits"].astype(jnp.int32)),
+        value=tree.value.at[ROOT].set(carry["value"].astype(jnp.float32)),
+        prior=tree.prior.at[ROOT].set(prior))
 
 
 def max_nodes(tree: Tree) -> int:
-    return tree["visits"].shape[0]
+    return tree.max_nodes
 
 
 def num_actions(tree: Tree) -> int:
-    return tree["children"].shape[1]
+    return tree.num_actions
 
 
 def get_state(tree: Tree, node):
-    return jax.tree_util.tree_map(lambda x: x[node], tree["state"])
+    return jax.tree_util.tree_map(lambda x: x[node], tree.state)
 
 
 def root_action_by_visits(tree: Tree):
     """Final move selection: most-visited root child (standard robust child)."""
-    ch = tree["children"][ROOT]
-    n = jnp.where(ch >= 0, tree["visits"][jnp.maximum(ch, 0)], -1)
+    ch = tree.children[ROOT]
+    n = jnp.where(ch >= 0, tree.visits[jnp.maximum(ch, 0)], -1)
     return jnp.argmax(n)
 
 
 def root_child_stats(tree: Tree):
-    ch = tree["children"][ROOT]
+    ch = tree.children[ROOT]
     valid = ch >= 0
     idx = jnp.maximum(ch, 0)
-    n = jnp.where(valid, tree["visits"][idx], 0)
-    w = jnp.where(valid, tree["value"][idx], 0.0)
+    n = jnp.where(valid, tree.visits[idx], 0)
+    w = jnp.where(valid, tree.value[idx], 0.0)
     return n, w, valid
 
 
 def check_consistency(tree: Tree) -> Dict[str, Any]:
-    """Host-side invariants (tests): visit flow conservation, vloss drained."""
-    nf = int(tree["next_free"])
-    visits = tree["visits"][:nf]
-    parent = tree["parent"][:nf]
-    ok_vloss = bool((tree["vloss"] == 0).all())
-    # each non-root node's visits accumulate into ancestors: root visits ==
-    # number of completed backups; sum of root-children visits <= root visits
-    ch = tree["children"][ROOT]
-    child_idx = ch[ch >= 0]
-    child_sum = int(tree["visits"][child_idx].sum()) if child_idx.size else 0
-    ok_flow = child_sum <= int(visits[ROOT])
-    ok_parent = bool((parent[1:] >= 0).all()) and bool((parent[1:] < nf).all())
+    """Invariant summary (tests): visit flow conservation, vloss drained,
+    parent pointers live.  Fully device-side — 0-d bool/int arrays, no
+    ``int()`` host round-trip, so it is safe to call inside traced code."""
+    n = max_nodes(tree)
+    idx = jnp.arange(n)
+    alive = live_mask(tree)
+    ok_vloss = (tree.vloss == 0).all()
+    ch = tree.children[ROOT]
+    child_sum = jnp.where(ch >= 0, tree.visits[jnp.maximum(ch, 0)], 0).sum()
+    ok_flow = child_sum <= tree.visits[ROOT]
+    nonroot = alive & (idx != ROOT)
+    p = tree.parent
+    ok_parent = jnp.where(
+        nonroot,
+        (p >= 0) & (p < n) & alive[jnp.clip(p, 0, n - 1)],
+        True).all()
     return {"vloss_drained": ok_vloss, "visit_flow": ok_flow,
-            "parents_valid": ok_parent, "nodes": nf}
+            "parents_valid": ok_parent, "nodes": alive.sum()}

@@ -1,0 +1,362 @@
+"""Pallas TPU fused search-wave megakernel (DESIGN.md §14).
+
+One launch drives a whole wave against the VMEM-resident arena planes
+instead of a kernel launch per tree level:
+
+* ``se_call``  — Select(lockstep descent, every level in-kernel) →
+  Expand(structural allocation) for the tree strategy's round.
+* ``bes_call`` — Backup(wave t-3) → Expand(wave t-1, structural) →
+  Select(wave t) for the pipeline tick: three stages, one launch.
+* ``b_call``   — Backup alone (the tree round's second launch, after the
+  out-of-kernel playout).
+
+The *domain* half of Expand (model ``step``/``is_terminal``) cannot run
+inside a kernel; the kernel emits the structural result (can/slot/new row
+per lane) and ``ref.finish_expand`` completes state/terminal outside the
+launch.  Running Select ahead of that finish is sound — see ``ref.py``.
+
+Layout notes (guide: 1-D iota is unsupported on TPU — all index vectors
+come from ``broadcasted_iota``; scalars ride in one ``[1, 4]`` SMEM word;
+gathers/one-hot reductions use ``precision=HIGHEST`` dots so integer
+planes round-trip exactly below 2^24).  Grid is () — every plane fits one
+VMEM block at search-tree sizes; the mutable planes are input/output
+aliased so the launch updates them in place.
+
+Parity contract: phases mirror ``core.stages`` formula-for-formula
+(including the 1e30 unvisited clamp, the -1e30 invalid mask, first-max
+argmax tie-breaking, and the per-level own-virtual-loss exclusion), so the
+launch is bit-for-bit equal to the lockstep path at ``lanes == 1`` and
+integer-exact at any width; float backup sums may differ in the last ulp
+at ``lanes > 1`` only where a node takes multiple same-wave contributions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.parallel.compat import tpu_compiler_params
+
+UNEXPANDED = -1
+ROOT = 0
+NEG_INF = -1e30          # python literal: jnp constants can't be captured
+                         # inside a pallas kernel body
+_HI = jax.lax.Precision.HIGHEST
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveCfg:
+    """Static shape/knob bundle threaded through the phase helpers."""
+    n: int            # max_nodes
+    a: int            # num_actions
+    lanes: int
+    path_len: int
+    max_depth: int
+    cp: float
+    vl_weight: float
+    puct: bool
+
+
+def _iota(rows: int, cols: int, dim: int):
+    return jax.lax.broadcasted_iota(jnp.int32, (rows, cols), dim)
+
+
+def _onehot(idx, n):
+    """[K] i32 -> [K, n] f32 one-hot (0 where idx is out of range)."""
+    k = idx.shape[0]
+    return (_iota(k, n, 1) == idx[:, None]).astype(jnp.float32)
+
+
+def _gather_vec(v, idx):
+    """v [N] f32, idx [K] -> [K] f32 (exact for integer-valued v < 2^24)."""
+    return jax.lax.dot_general(_onehot(idx, v.shape[0]), v[:, None],
+                               (((1,), (0,)), ((), ())),
+                               precision=_HI)[:, 0]
+
+
+def _gather_rows(m, idx):
+    """m [N, C] f32, idx [K] -> [K, C] f32."""
+    return jax.lax.dot_general(_onehot(idx, m.shape[0]), m,
+                               (((1,), (0,)), ((), ())), precision=_HI)
+
+
+# ---------------------------------------------------------------------------
+# phase helpers (operate on refs/values; mirror core.stages bit-for-bit)
+# ---------------------------------------------------------------------------
+def _backup_phase(cfg: WaveCfg, visits_ref, value_ref, vloss_ref, prior_ref,
+                  pb_path, pb_value, pb_isnew, pb_node, pb_priors, pb_valid):
+    l, p, n = cfg.lanes, cfg.path_len, cfg.n
+    mask = (pb_path >= 0) & (pb_valid > 0)                 # [L, P]
+    flat_idx = pb_path.reshape(l * p)
+    flat_m = mask.reshape(l * p)
+    oh = _onehot(flat_idx, n) * flat_m.reshape(l * p, 1).astype(jnp.float32)
+    counts = oh.sum(axis=0)                                # [N] f32, exact
+    vals = jnp.broadcast_to(pb_value.reshape(l, 1), (l, p)).reshape(l * p)
+    vsum = jax.lax.dot_general(vals[None, :], oh,
+                               (((1,), (0,)), ((), ())), precision=_HI)[0]
+    visits_ref[...] = visits_ref[...] + counts[:, None].astype(jnp.int32)
+    value_ref[...] = value_ref[...] + vsum[:, None]
+    vloss_ref[...] = vloss_ref[...] - counts[:, None].astype(jnp.int32)
+    # priors for freshly created nodes (distinct rows across lanes)
+    pidx = jnp.where((pb_isnew > 0) & (pb_valid > 0), pb_node, n)[:, 0]
+    ohp = _onehot(pidx, n)                                 # [L, N]
+    written = ohp.sum(axis=0) > 0.5                        # [N]
+    pnew = jax.lax.dot_general(ohp, pb_priors, (((0,), (0,)), ((), ())),
+                               precision=_HI)              # [N, A]
+    prior_ref[...] = jnp.where(written[:, None], pnew, prior_ref[...])
+
+
+def _expand_phase(cfg: WaveCfg, children_ref, vloss_ref, terminal_v,
+                  free_list_ref, nf0, ft0, leafs, valid):
+    """Sequential-semantics structural expand: a fori over lanes reading the
+    live children rows, exactly like scanning ``stages.expand_one``."""
+    l, n, a = cfg.lanes, cfg.n, cfg.a
+    cap0 = ft0 + (n - nf0)
+    iota_a = _iota(1, a, 1)[0]
+
+    def body(i, carry):
+        r, can_acc, slot_acc, new_acc = carry
+        leaf = jax.lax.dynamic_index_in_dim(leafs, i, keepdims=False)
+        row = children_ref[pl.ds(leaf, 1), :][0]           # live row [A]
+        free = row == UNEXPANDED
+        has_slot = free.any()
+        term = jax.lax.dynamic_index_in_dim(terminal_v, i, keepdims=False)
+        lane_ok = jax.lax.dynamic_index_in_dim(valid, i, keepdims=False)
+        can = lane_ok & has_slot & ~term & (r < cap0)
+        slot = jnp.min(jnp.where(free, iota_a, a)).astype(jnp.int32)
+        slot = jnp.minimum(slot, a - 1)
+        pop_row = jnp.clip(ft0 - 1 - r, 0, n - 1)
+        new = jnp.where(
+            r < ft0,
+            free_list_ref[pl.ds(pop_row, 1), :][0, 0],
+            nf0 + (r - ft0)).astype(jnp.int32)
+        # link the child + its in-flight virtual loss (row-granular stores)
+        new_row = jnp.where((iota_a == slot) & can, new, row)
+        children_ref[pl.ds(leaf, 1), :] = new_row[None, :]
+        nc = jnp.clip(new, 0, n - 1)
+        vrow = vloss_ref[pl.ds(nc, 1), :]
+        vloss_ref[pl.ds(nc, 1), :] = vrow + jnp.where(can, 1, 0)
+        r = r + can.astype(jnp.int32)
+        can_acc = can_acc.at[i].set(can)
+        slot_acc = slot_acc.at[i].set(slot)
+        new_acc = new_acc.at[i].set(jnp.where(can, new, n))
+        return r, can_acc, slot_acc, new_acc
+
+    _, can, slot, new_s = jax.lax.fori_loop(
+        0, l, body,
+        (jnp.int32(0), jnp.zeros((l,), bool), jnp.zeros((l,), jnp.int32),
+         jnp.zeros((l,), jnp.int32)))
+    # terminal gather is done against leaf *indices* by the caller
+    return can, slot, new_s
+
+
+def _select_phase(cfg: WaveCfg, vloss_ref, visits_v, value_v, prior_v,
+                  children_v, terminal_v, wave_valid):
+    """Lockstep descent, every level in-kernel (mirrors
+    ``stages.select_wave_fused``)."""
+    l, n, a, p = cfg.lanes, cfg.n, cfg.a, cfg.path_len
+    valid = jnp.broadcast_to(wave_valid > 0, (l,))
+    vloss_pre = vloss_ref[...][:, 0]                       # pre-wave, for dup
+    rv = vloss_ref[pl.ds(ROOT, 1), :]
+    vloss_ref[pl.ds(ROOT, 1), :] = rv + valid.sum().astype(jnp.int32)
+
+    def lane_active(node, depth):
+        ch = _gather_rows(children_v, node)
+        fully = (ch >= -0.5).all(axis=-1)                  # all children >= 0
+        term = _gather_vec(terminal_v, node) > 0.5
+        return fully & ~term & (depth < cfg.max_depth)
+
+    node0 = jnp.zeros((l,), jnp.int32)
+    depth0 = jnp.zeros((l,), jnp.int32)
+    path0 = jnp.where(_iota(l, p, 1) == 0, ROOT, UNEXPANDED)
+    active0 = valid & lane_active(node0, depth0)
+    iota_a = _iota(l, a, 1)
+    iota_p = _iota(l, p, 1)
+
+    def body(_, c):
+        node, depth, path, active = c
+        chf = _gather_rows(children_v, node)               # [L, A] f32
+        ch = chf.astype(jnp.int32)
+        idx = jnp.maximum(ch, 0)
+        vloss_v = vloss_ref[...][:, 0].astype(jnp.float32)
+        own = active.astype(jnp.int32)
+        cn = _gather_vec(visits_v, idx.reshape(-1)).reshape(l, a)
+        cw = _gather_vec(value_v, idx.reshape(-1)).reshape(l, a)
+        cvl = _gather_vec(vloss_v, idx.reshape(-1)).reshape(l, a)
+        pn = (_gather_vec(visits_v, node) + _gather_vec(vloss_v, node)
+              - own.astype(jnp.float32))
+        # uct_scores, formula-for-formula (core.uct)
+        n_eff = cn + cvl
+        w_eff = cw - cfg.vl_weight * cvl
+        pnc = jnp.maximum(pn, 1.0)
+        q = w_eff / jnp.maximum(n_eff, 1.0)
+        if cfg.puct:
+            pr = _gather_rows(prior_v, node)
+            explore = pr * jnp.sqrt(pnc)[:, None] / (1.0 + n_eff)
+        else:
+            explore = jnp.sqrt(jnp.log(pnc)[:, None] / jnp.maximum(n_eff, 1.0))
+        s = q + cfg.cp * explore
+        s = jnp.where(n_eff < 0.5, 1e30, s)
+        s = jnp.where((ch >= 0) & active[:, None], s, NEG_INF)
+        sel_a = jnp.argmax(s, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(iota_a == sel_a[:, None], ch, 0).sum(axis=-1) \
+            .astype(jnp.int32)
+        col = jnp.where(active, depth + 1, p)
+        path = jnp.where(iota_p == col[:, None], nxt[:, None], path)
+        adds = (_onehot(nxt, n)
+                * active.astype(jnp.float32)[:, None]).sum(axis=0)
+        vloss_ref[...] = vloss_ref[...] + adds[:, None].astype(jnp.int32)
+        node = jnp.where(active, nxt, node)
+        depth = depth + own
+        active = active & lane_active(node, depth)
+        return node, depth, path, active
+
+    leaf, depth, path, _ = jax.lax.fori_loop(
+        0, cfg.max_depth, body, (node0, depth0, path0, active0))
+    shared = ((leaf[:, None] == leaf[None, :])
+              & (_iota(l, l, 0) > _iota(l, l, 1))).any(axis=1)
+    dup = ((_gather_vec(vloss_pre.astype(jnp.float32), leaf) > 0.5)
+           | shared) & valid
+    path = jnp.where(valid[:, None], path, UNEXPANDED)
+    return leaf, depth, path, dup, valid
+
+
+def _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup):
+    s_leaf[...] = leaf[:, None]
+    s_depth[...] = depth[:, None]
+    s_path[...] = path
+    s_dup[...] = dup[:, None].astype(jnp.int32)
+
+
+def _store_es(e_can, e_slot, e_new, can, slot, new_s):
+    e_can[...] = can[:, None].astype(jnp.int32)
+    e_slot[...] = slot[:, None]
+    e_new[...] = new_s[:, None]
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+def _se_kernel(vloss_in, children_in, visits, value, prior, terminal,
+               free_list, scal, vloss_o, children_o,
+               s_leaf, s_depth, s_path, s_dup, e_can, e_slot, e_new, *,
+               cfg: WaveCfg):
+    del vloss_in, children_in                  # aliased into the outputs
+    visits_v = visits[...][:, 0].astype(jnp.float32)
+    value_v = value[...][:, 0]
+    prior_v = prior[...]
+    terminal_v = terminal[...][:, 0].astype(jnp.float32)
+    children_v = children_o[...].astype(jnp.float32)   # pre-expand snapshot
+    wave_valid = scal[0, 2]
+    leaf, depth, path, dup, valid = _select_phase(
+        cfg, vloss_o, visits_v, value_v, prior_v, children_v, terminal_v,
+        wave_valid)
+    _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup)
+    term_leaf = _gather_vec(terminal_v, leaf) > 0.5
+    can, slot, new_s = _expand_phase(
+        cfg, children_o, vloss_o, term_leaf, free_list,
+        scal[0, 0], scal[0, 1], leaf, valid)
+    _store_es(e_can, e_slot, e_new, can, slot, new_s)
+
+
+def _bes_kernel(visits_in, value_in, vloss_in, prior_in, children_in,
+                terminal, free_list, scal, se_leaf, se_valid,
+                pb_path, pb_value, pb_priors, pb_node, pb_isnew, pb_valid,
+                visits_o, value_o, vloss_o, prior_o, children_o,
+                s_leaf, s_depth, s_path, s_dup, e_can, e_slot, e_new, *,
+                cfg: WaveCfg):
+    del visits_in, value_in, vloss_in, prior_in, children_in   # aliased
+    _backup_phase(cfg, visits_o, value_o, vloss_o, prior_o,
+                  pb_path[...], pb_value[...], pb_isnew[...], pb_node[...],
+                  pb_priors[...], pb_valid[...])
+    terminal_v = terminal[...][:, 0].astype(jnp.float32)
+    leafs = se_leaf[...][:, 0]
+    e_valid = se_valid[...][:, 0] > 0
+    term_leaf = _gather_vec(terminal_v, leafs) > 0.5
+    can, slot, new_s = _expand_phase(
+        cfg, children_o, vloss_o, term_leaf, free_list,
+        scal[0, 0], scal[0, 1], leafs, e_valid)
+    _store_es(e_can, e_slot, e_new, can, slot, new_s)
+    # Select reads children AFTER the structural expand (same tick order as
+    # the unfused pipeline); new rows are never descended into (not fully
+    # expanded), so their unwritten state/terminal are never consulted.
+    visits_v = visits_o[...][:, 0].astype(jnp.float32)
+    value_v = value_o[...][:, 0]
+    prior_v = prior_o[...]
+    children_v = children_o[...].astype(jnp.float32)
+    leaf, depth, path, dup, _ = _select_phase(
+        cfg, vloss_o, visits_v, value_v, prior_v, children_v, terminal_v,
+        scal[0, 2])
+    _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup)
+
+
+def _b_kernel(visits_in, value_in, vloss_in, prior_in,
+              pb_path, pb_value, pb_priors, pb_node, pb_isnew, pb_valid,
+              visits_o, value_o, vloss_o, prior_o, *, cfg: WaveCfg):
+    del visits_in, value_in, vloss_in, prior_in               # aliased
+    _backup_phase(cfg, visits_o, value_o, vloss_o, prior_o,
+                  pb_path[...], pb_value[...], pb_isnew[...], pb_node[...],
+                  pb_priors[...], pb_valid[...])
+
+
+# ---------------------------------------------------------------------------
+# launch wrappers (2-D plane packing; ops.py owns arena <-> plane plumbing)
+# ---------------------------------------------------------------------------
+def _call(kernel, ins, out_shapes, aliases, interpret):
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        input_output_aliases=aliases,
+        compiler_params=tpu_compiler_params(dimension_semantics=()),
+        interpret=interpret,
+    )(*ins)
+
+
+def _sel_out_shapes(cfg: WaveCfg):
+    l, p = cfg.lanes, cfg.path_len
+    return [jax.ShapeDtypeStruct((l, 1), jnp.int32),      # leaf
+            jax.ShapeDtypeStruct((l, 1), jnp.int32),      # depth
+            jax.ShapeDtypeStruct((l, p), jnp.int32),      # path
+            jax.ShapeDtypeStruct((l, 1), jnp.int32)]      # dup
+
+
+def _es_out_shapes(cfg: WaveCfg):
+    l = cfg.lanes
+    return [jax.ShapeDtypeStruct((l, 1), jnp.int32)] * 3  # can, slot, new
+
+
+def se_call(cfg: WaveCfg, vloss, children, visits, value, prior, terminal,
+            free_list, scal, *, interpret=False):
+    """Select→Expand launch; returns (vloss, children, sel..., es...)."""
+    outs = ([jax.ShapeDtypeStruct(vloss.shape, vloss.dtype),
+             jax.ShapeDtypeStruct(children.shape, children.dtype)]
+            + _sel_out_shapes(cfg) + _es_out_shapes(cfg))
+    return _call(functools.partial(_se_kernel, cfg=cfg),
+                 [vloss, children, visits, value, prior, terminal,
+                  free_list, scal],
+                 outs, {0: 0, 1: 1}, interpret)
+
+
+def bes_call(cfg: WaveCfg, visits, value, vloss, prior, children, terminal,
+             free_list, scal, se_leaf, se_valid, pb, *, interpret=False):
+    """Backup→Expand→Select launch (one pipeline tick's tree mutations)."""
+    outs = ([jax.ShapeDtypeStruct(x.shape, x.dtype)
+             for x in (visits, value, vloss, prior, children)]
+            + _sel_out_shapes(cfg) + _es_out_shapes(cfg))
+    return _call(functools.partial(_bes_kernel, cfg=cfg),
+                 [visits, value, vloss, prior, children, terminal, free_list,
+                  scal, se_leaf, se_valid] + list(pb),
+                 outs, {i: i for i in range(5)}, interpret)
+
+
+def b_call(cfg: WaveCfg, visits, value, vloss, prior, pb, *,
+           interpret=False):
+    """Backup-only launch; returns the four updated planes."""
+    outs = [jax.ShapeDtypeStruct(x.shape, x.dtype)
+            for x in (visits, value, vloss, prior)]
+    return _call(functools.partial(_b_kernel, cfg=cfg),
+                 [visits, value, vloss, prior] + list(pb),
+                 outs, {i: i for i in range(4)}, interpret)

@@ -86,6 +86,12 @@ class SearchConfig:
     keep_tree: when False, ``SearchResult.tree`` is dropped (saves memory in
                ``search_batch`` fan-outs).
     params:    the shared UCT/virtual-loss knobs (core.stages.SearchParams).
+    kernels /
+    wave_select: top-level conveniences for the consolidated kernel pair
+               (DESIGN.md §14).  Anything other than "auto" is forwarded
+               into ``params`` at construction, so
+               ``SearchConfig(kernels="pallas")`` ==
+               ``SearchConfig(params=SearchParams(kernels="pallas"))``.
     """
 
     method: str = "sequential"
@@ -94,6 +100,18 @@ class SearchConfig:
     max_nodes: int = 0
     keep_tree: bool = True
     params: SearchParams = dataclasses.field(default_factory=SearchParams)
+    kernels: str = "auto"
+    wave_select: str = "auto"
+
+    def __post_init__(self):
+        upd = {}
+        if self.kernels != "auto" and self.params.kernels == "auto":
+            upd["kernels"] = self.kernels
+        if self.wave_select != "auto" and self.params.wave_select == "auto":
+            upd["wave_select"] = self.wave_select
+        if upd:
+            object.__setattr__(
+                self, "params", dataclasses.replace(self.params, **upd))
 
 
 # ---------------------------------------------------------------------------

@@ -107,10 +107,10 @@ def leaf(domain, cfg: SearchConfig, rng) -> SearchResult:
         paths = exp["path"]
         mask = paths >= 0
         idx = jnp.maximum(paths, 0)
-        tree = dict(tree)
-        tree["visits"] = tree["visits"].at[idx].add(mask * workers)
-        tree["value"] = tree["value"].at[idx].add(jnp.where(mask, v_sum, 0.0))
-        tree["vloss"] = tree["vloss"].at[idx].add(-mask.astype(jnp.int32))
+        tree = tree.replace(
+            visits=tree.visits.at[idx].add(mask * workers),
+            value=tree.value.at[idx].add(jnp.where(mask, v_sum, 0.0)),
+            vloss=tree.vloss.at[idx].add(-mask.astype(jnp.int32)))
         return tree, None
 
     tree, _ = jax.lax.scan(it, tree, jax.random.split(rng, iters))
@@ -127,7 +127,13 @@ def tree_parallel(domain, cfg: SearchConfig, rng) -> SearchResult:
     rounds = _ceil_div(cfg.budget, threads)
     tree = init_tree(domain, cfg.max_nodes or rounds * threads + 2)
 
+    fused = sp.resolved_wave_select == "mega"
+
     def round_fn(tree, rng_t):
+        if fused:        # whole round through kernels/search_wave (§14)
+            tree, sels = S.mega_round(tree, domain, sp, threads,
+                                      jnp.asarray(True), rng_t)
+            return tree, {"dup": sels["dup"].sum()}
         tree, sels = S.select_wave(tree, sp, threads, jnp.asarray(True))
         tree, exps = S.expand_wave(tree, domain, sp, sels)
         po = S.playout_wave(domain, sp, exps, rng_t)
@@ -160,18 +166,25 @@ def pipeline(domain, cfg: SearchConfig, rng) -> SearchResult:
         S.empty_playout(sp, lanes, domain.num_actions),     # P -> B buffer
     )
 
+    fused = sp.resolved_wave_select == "mega"
+
     def tick(carry, inp):
         t, rng_t = inp
         tree, buf_se, buf_ep, buf_pb = carry
-        # Backup stage — wave t-3 (oldest in flight)
-        tree = S.backup_wave(tree, buf_pb)
-        # Playout stage — wave t-2 (parallel lanes)
-        new_pb = S.playout_wave(domain, sp, buf_ep, rng_t)
-        # Expand stage — wave t-1
-        tree, new_ep = S.expand_wave(tree, domain, sp, buf_se)
-        # Select stage — wave t (masked during drain)
-        wave_valid = t < n_waves
-        tree, new_se = S.select_wave(tree, sp, lanes, wave_valid)
+        wave_valid = t < n_waves                # Select masked during drain
+        if fused:     # one B→E→S launch per tick (kernels/search_wave, §14)
+            tree, new_se, new_ep, new_pb = S.mega_tick(
+                tree, domain, sp, lanes, wave_valid,
+                buf_se, buf_ep, buf_pb, rng_t)
+        else:
+            # Backup stage — wave t-3 (oldest in flight)
+            tree = S.backup_wave(tree, buf_pb)
+            # Playout stage — wave t-2 (parallel lanes)
+            new_pb = S.playout_wave(domain, sp, buf_ep, rng_t)
+            # Expand stage — wave t-1
+            tree, new_ep = S.expand_wave(tree, domain, sp, buf_se)
+            # Select stage — wave t
+            tree, new_se = S.select_wave(tree, sp, lanes, wave_valid)
         st = {
             "dup": new_se["dup"].sum(),
             "completed": buf_pb["valid"].sum(),

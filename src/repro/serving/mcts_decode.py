@@ -55,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.domains.lm_decode import CachedLMDecodeDomain, LMDecodeDomain
-from repro.core.tree import empty_root_carry, reroot
+from repro.core.tree import init_tree, reroot, reroot_ok
 from repro.models.base import ModelConfig, seq_prefill, seq_step
 from repro.parallel.compat import (batch_sharding, mesh_num_devices,
                                    replicated_sharding)
@@ -83,16 +83,26 @@ class MCTSDecodeConfig:
     # prefill-then-step, the PR-4 parity invariant), only the per-token
     # prefill cost disappears.
     kv_splice: bool = False
-    # Cross-token subtree reuse (DESIGN.md §12): reroot on the committed
-    # child and warm-start the next search's root with its carried
-    # N/W/children statistics.  Changes exploration (deliberately) — leave
-    # off for bit-for-bit parity with cold per-token searches.
+    # Cross-token subtree reuse (DESIGN.md §14): reroot the arena on the
+    # committed child — the whole surviving subtree (nodes, stats, cached
+    # states) IS the next search's starting tree; abandoned rows are
+    # recycled through the arena free-list.  Changes exploration
+    # (deliberately) — leave off for bit-for-bit parity with cold per-token
+    # searches.
     tree_reuse: bool = False
     # Select-stage iteration order inside each per-token search (DESIGN.md
-    # §11): "lockstep" descends all of a wave's lanes together with one
+    # §11/§14): "lockstep" descends all of a wave's lanes together with one
     # batched UCT pass per tree level; "scan" is the lane-major original;
-    # "auto" follows SearchParams' resolution (lockstep iff use_pallas).
+    # "mega" fuses the whole wave into kernels/search_wave; "auto" follows
+    # SearchParams' resolution.
     wave_select: str = "auto"
+    # Kernel implementation for the accelerated paths ("auto" -> Pallas on
+    # TPU); threaded into SearchParams.kernels (DESIGN.md §14).
+    kernels: str = "auto"
+    # Arena capacity per slot for tree_reuse (0 -> 2*budget+2: one search's
+    # worth of fresh allocations on top of a carried subtree).  The carry
+    # must keep one capacity across tokens, so this is fixed per engine.
+    arena_nodes: int = 0
 
     def __post_init__(self):
         if self.kv_splice and not self.cached:
@@ -109,12 +119,20 @@ class MCTSDecodeConfig:
         """True when decoding carries per-slot state across tokens."""
         return self.kv_splice or self.tree_reuse
 
+    @property
+    def resolved_arena_nodes(self) -> int:
+        return self.arena_nodes or 2 * self.budget + 2
+
     def search_config(self) -> SearchConfig:
         return SearchConfig(
             method=self.method, budget=self.budget, lanes=self.lanes,
             keep_tree=self.tree_reuse,
+            # tree_reuse pins every token's tree to ONE arena capacity so
+            # the carried arena splices into the next search unchanged
+            max_nodes=self.resolved_arena_nodes if self.tree_reuse else 0,
+            kernels=self.kernels, wave_select=self.wave_select,
             params=SearchParams(cp=self.cp, max_depth=self.search_depth,
-                                puct=True, wave_select=self.wave_select))
+                                puct=True))
 
 
 def _domain(cfg: ModelConfig, params, prompt, dcfg: MCTSDecodeConfig,
@@ -156,10 +174,13 @@ class ReusableSearcher:
     * ``"cache"``/``"logits"`` (``kv_splice``) — each slot's advanced root
       KV row and paired next-token logits, advanced by one ``seq_step``
       when a token commits;
-    * ``"warm"`` (``tree_reuse``) — each slot's ``RootCarry``
-      (``core.tree.reroot``): the committed child's N/W, prior row, and
-      children visit/value counts, applied as the next search's root warm
-      start.
+    * ``"arena"``/``"action"``/``"alive"`` (``tree_reuse``) — each slot's
+      full search arena from the previous token, the action it committed,
+      and a liveness flag.  At the next step the arena is rerooted on the
+      committed child (``core.tree.reroot`` — abandoned rows recycled
+      through the free-list) and spliced in as the search's starting tree
+      (``LMDecodeDomain.root_arena``); a dead/unreusable slot searches
+      cold, bit-for-bit.
 
     Protocol (the engine's request lifecycle maps 1:1 onto it)::
 
@@ -198,15 +219,22 @@ class ReusableSearcher:
     # -- carry lifecycle ----------------------------------------------------
     def init_carry(self, buf_len: int):
         """Identity carry for ``padded`` slots sharing a ``[*, buf_len]``
-        token buffer: uniform/zero warm stats (bit-for-bit a cold search)
-        and zeroed KV rows (dead until ``admit`` prefills them)."""
+        token buffer: dead (all-zero) arenas — ``alive`` is False until the
+        first search fills them, so every slot's first token searches cold,
+        bit-for-bit — and zeroed KV rows (dead until ``admit`` prefills)."""
         d = self.dcfg
         carry = {}
         if d.tree_reuse:
-            iden = empty_root_carry(d.num_actions)
-            carry["warm"] = jax.tree_util.tree_map(
-                lambda v: jnp.broadcast_to(v, (self.padded,) + v.shape).copy(),
-                iden)
+            dummy = _domain(self.cfg, self.params,
+                            jnp.zeros((buf_len,), jnp.int32), d,
+                            prompt_len=jnp.int32(1))
+            shapes = jax.eval_shape(
+                lambda: init_tree(dummy, d.resolved_arena_nodes))
+            carry["arena"] = jax.tree_util.tree_map(
+                lambda s: jnp.zeros((self.padded,) + s.shape, s.dtype),
+                shapes)
+            carry["action"] = jnp.zeros((self.padded,), jnp.int32)
+            carry["alive"] = jnp.zeros((self.padded,), bool)
         if d.kv_splice:
             max_len = buf_len + d.search_depth + d.rollout_len
             lg, cache = jax.eval_shape(
@@ -230,9 +258,9 @@ class ReusableSearcher:
         d = self.dcfg
         new = dict(carry)
         if d.tree_reuse:
-            iden = empty_root_carry(d.num_actions)
-            new["warm"] = jax.tree_util.tree_map(
-                lambda full, v: full.at[slot].set(v), carry["warm"], iden)
+            # killing the liveness flag IS the reset: a dead slot's next
+            # search starts cold and overwrites the stale arena wholesale
+            new["alive"] = carry["alive"].at[slot].set(False)
         if d.kv_splice:
             max_len = buf_row.shape[0] + d.search_depth + d.rollout_len
             toks = jnp.zeros((max_len,), jnp.int32)
@@ -260,6 +288,13 @@ class ReusableSearcher:
 
     def _step_impl(self, buf, lens, rng, carry):
         cfg, params, d = self.cfg, self.params, self.dcfg
+        if d.tree_reuse:
+            # reroot every slot's arena on its committed action (recycling
+            # the abandoned rows); a slot is reusable only if it is alive
+            # AND the committed child was actually expanded last search
+            use = carry["alive"] & jax.vmap(reroot_ok)(
+                carry["arena"], carry["action"])
+            ar = jax.vmap(reroot)(carry["arena"], carry["action"])
         domains = []
         for i in range(self.padded):
             kw = {}
@@ -267,11 +302,17 @@ class ReusableSearcher:
                 kw["root_cache"] = jax.tree_util.tree_map(
                     lambda x: x[i], carry["cache"])
                 kw["root_logits"] = carry["logits"][i]
+            dom = _domain(cfg, params, buf[i], d, prompt_len=lens[i], **kw)
             if d.tree_reuse:
-                kw["root_warm"] = jax.tree_util.tree_map(
-                    lambda x: x[i], carry["warm"])
-            domains.append(_domain(cfg, params, buf[i], d,
-                                   prompt_len=lens[i], **kw))
+                ar_i = jax.tree_util.tree_map(lambda x: x[i], ar)
+                # carried terminal flags reflect the PREVIOUS horizon
+                # (len >= plen + depth, and plen just advanced) — refresh
+                # them against this token's domain
+                ar_i = ar_i.replace(
+                    terminal=jax.vmap(dom.is_terminal)(ar_i.state))
+                dom = dataclasses.replace(
+                    dom, root_arena=ar_i, root_arena_alive=use[i])
+            domains.append(dom)
         res = search_batch(domains, self.scfg, rng)
         if d.kv_splice:
             # the carried logits ARE the root's next-token distribution
@@ -287,8 +328,11 @@ class ReusableSearcher:
         toks = tops[jnp.arange(self.padded), res.best_action].astype(jnp.int32)
         new = dict(carry)
         if d.tree_reuse:
-            # reroot on the committed child; its stats seed the next search
-            new["warm"] = jax.vmap(reroot)(res.tree, res.best_action)
+            # the searched arenas + committed actions ARE the carry; the
+            # reroot happens lazily at the START of the next step
+            new["arena"] = res.tree
+            new["action"] = res.best_action.astype(jnp.int32)
+            new["alive"] = jnp.ones((self.padded,), bool)
         if d.kv_splice:
             # advance each root row by the committed token (ONE step, vs a
             # whole-prefix prefill on the cold path)

@@ -1,5 +1,6 @@
 """The tools/api_surface.py checker: current tree is clean; a smuggled
-run_* entry point outside repro/search is caught."""
+run_* entry point outside repro/search is caught; a dict-style tree plane
+subscript outside core/arena.py is caught (DESIGN.md §14)."""
 import pathlib
 import sys
 
@@ -17,12 +18,31 @@ def test_detects_new_entry_point(tmp_path):
     mod = tmp_path / "repro" / "core" / "rogue.py"
     mod.parent.mkdir(parents=True)
     mod.write_text("def run_rogue_search(domain):\n    pass\n")
-    assert api_surface.check(tmp_path) == [("repro/core/rogue.py",
-                                            "run_rogue_search")]
+    [(rel, msg)] = api_surface.check(tmp_path)
+    assert rel == "repro/core/rogue.py" and "run_rogue_search" in msg
 
 
 def test_search_package_is_exempt(tmp_path):
     mod = tmp_path / "repro" / "search" / "extra.py"
     mod.parent.mkdir(parents=True)
     mod.write_text("def run_new_strategy(domain):\n    pass\n")
+    assert api_surface.check(tmp_path) == []
+
+
+def test_detects_dict_style_plane_access(tmp_path):
+    mod = tmp_path / "repro" / "search" / "sneaky.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("def peek(tree):\n    return tree['visits'].sum()\n")
+    [(rel, msg)] = api_surface.check(tmp_path)
+    assert rel == "repro/search/sneaky.py"
+    assert "'visits'" in msg and "TreeArena" in msg
+
+
+def test_plane_access_allowed_in_arena_and_dict_literals(tmp_path):
+    arena = tmp_path / "repro" / "core" / "arena.py"
+    arena.parent.mkdir(parents=True)
+    arena.write_text("def shim(self, k):\n    return planes['vloss']\n")
+    ok = tmp_path / "repro" / "core" / "other.py"
+    # dict literal keys and buffer keys outside the plane set are fine
+    ok.write_text("d = {'prior': 1}\nx = sel['leaf']\nv = po['value']\n")
     assert api_surface.check(tmp_path) == []

@@ -1,0 +1,300 @@
+"""Typed SoA ``TreeArena`` + fused search-wave megakernel (DESIGN.md §14).
+
+Three layers of contract:
+
+* arena mechanics — alloc/release/compact/reroot row accounting, the
+  free-list LIFO order, the dict-access deprecation shim, pytree round-trip;
+* fused-wave parity — the ref fused round/tick (``kernels/search_wave/ref``)
+  and the Pallas megakernel (interpret mode on CPU) are BIT-FOR-BIT equal
+  to the unfused lockstep path on the uint32-hash PGame domain, at lanes
+  1/4/8, for every integer AND float plane;
+* strategy surface — all five strategies run under ``wave_select="mega"``
+  and equal their lockstep selves exactly at ``lanes == 1`` (the ISSUE
+  acceptance bar; sequential/root/leaf don't route wave ops, asserted as
+  regression guards).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stages as S
+from repro.core.arena import (ROOT, UNEXPANDED, TreeArena, alloc,
+                              arena_stats, can_alloc, init_arena, live_mask,
+                              release, reroot, reroot_ok)
+from repro.core.domains.pgame import PGameDomain
+from repro.core.tree import check_consistency, init_tree
+from repro.kernels.search_wave import ops, ref
+from repro.search import SearchConfig, SearchParams, search
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
+SP = S.SearchParams(cp=0.7, max_depth=6, kernels="ref")
+PLANES = ("visits", "value", "vloss", "children", "parent", "action",
+          "prior", "terminal", "next_free", "free_top")
+
+
+def _arena(n=8, a=3):
+    return init_arena({"v": jnp.int32(7)}, a, n)
+
+
+def _assert_same(ta, tb, fields=PLANES, msg=""):
+    for f in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ta, f)),
+                                      np.asarray(getattr(tb, f)),
+                                      err_msg=f"{msg}{f}")
+
+
+# ---------------------------------------------------------------------------
+# arena mechanics
+# ---------------------------------------------------------------------------
+def test_init_arena_root_row():
+    ar = _arena()
+    assert int(ar.next_free) == 1 and int(ar.free_top) == 0
+    assert int(ar.parent[ROOT]) == -1
+    assert bool((np.asarray(ar.children) == UNEXPANDED).all())
+    assert int(np.asarray(live_mask(ar)).sum()) == 1
+    assert ar.max_nodes == 8 and ar.num_actions == 3
+
+
+def test_alloc_bumps_then_pops_lifo():
+    ar = _arena()
+    ar, r1, ok1 = alloc(ar)
+    ar, r2, ok2 = alloc(ar)
+    assert (int(r1), int(r2)) == (1, 2) and bool(ok1) and bool(ok2)
+    ar = release(ar, jnp.array([1, 2]))
+    assert int(ar.free_top) == 2
+    ar, r3, _ = alloc(ar)               # LIFO: last released pops first
+    assert int(r3) == 2
+    ar, r4, _ = alloc(ar)
+    assert int(r4) == 1
+    assert int(ar.free_top) == 0 and int(ar.next_free) == 3
+
+
+def test_alloc_respects_capacity():
+    ar = _arena(n=3)
+    ar, _, ok1 = alloc(ar)
+    ar, _, ok2 = alloc(ar)
+    assert bool(ok1) and bool(ok2) and not bool(can_alloc(ar))
+    ar, row, ok3 = alloc(ar)
+    assert not bool(ok3) and int(row) == ar.max_nodes   # drop sentinel
+    assert int(ar.next_free) == 3                        # unchanged
+
+
+def test_alloc_masked_is_noop():
+    ar = _arena()
+    ar2, row, ok = alloc(ar, jnp.asarray(False))
+    assert not bool(ok) and int(row) == ar.max_nodes
+    _assert_same(ar, ar2)
+
+
+def test_release_resets_planes():
+    ar = _arena()
+    ar, r, _ = alloc(ar)
+    ar = ar.replace(visits=ar.visits.at[r].set(5),
+                    parent=ar.parent.at[r].set(0),
+                    children=ar.children.at[r, 0].set(2))
+    ar = release(ar, r)
+    assert int(ar.visits[int(r)]) == 0
+    assert int(ar.parent[int(r)]) == -1
+    assert bool((np.asarray(ar.children[int(r)]) == UNEXPANDED).all())
+    assert not bool(np.asarray(live_mask(ar))[int(r)])
+    st = jax.tree_util.tree_map(int, arena_stats(ar))
+    assert st["capacity_left"] == ar.max_nodes - 1
+
+
+def test_dict_access_shim_warns():
+    ar = _arena()
+    with pytest.warns(DeprecationWarning, match="visits"):
+        v = ar["visits"]
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(ar.visits))
+    with pytest.raises(KeyError):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ar["not_a_plane"]
+
+
+def test_arena_is_a_pytree():
+    ar = _arena()
+    leaves, treedef = jax.tree_util.tree_flatten(ar)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, TreeArena)
+    _assert_same(ar, back)
+    # jit/vmap round-trip (the serving carry relies on both)
+    out = jax.jit(lambda t: t.replace(visits=t.visits + 1))(ar)
+    assert int(out.visits[ROOT]) == 1
+
+
+def test_reroot_recycles_into_free_list():
+    """Grow root->c0->g0 plus a sibling c1; reroot on action 0 keeps {c0,g0}
+    and releases {root, c1} back to capacity."""
+    ar = _arena(n=8, a=2)
+    def attach(ar, parent, slot):
+        ar, row, ok = alloc(ar)
+        return ar.replace(
+            children=ar.children.at[parent, slot].set(row),
+            parent=ar.parent.at[row].set(parent),
+            action=ar.action.at[row].set(slot)), row
+    ar, c0 = attach(ar, 0, 0)
+    ar, c1 = attach(ar, 0, 1)
+    ar, g0 = attach(ar, int(c0), 1)
+    ar = ar.replace(visits=ar.visits.at[jnp.array([0, 1, 2, 3])].set(
+        jnp.array([9, 5, 3, 2])))
+    assert bool(reroot_ok(ar, jnp.int32(0)))
+    assert not bool(reroot_ok(ar, jnp.int32(1)) & (ar.children[0, 1] < 0))
+    r = reroot(ar, jnp.int32(0))
+    st = jax.tree_util.tree_map(int, arena_stats(r))
+    assert st["live"] == 2 and st["next_free"] == 2
+    assert st["capacity_left"] == 6
+    assert int(r.visits[ROOT]) == 5                    # c0 promoted
+    assert int(r.visits[int(np.asarray(r.children[ROOT, 1]))]) == 2   # g0
+    c = check_consistency(r)
+    assert bool(c["parents_valid"]) and bool(c["vloss_drained"])
+
+
+# ---------------------------------------------------------------------------
+# fused-wave parity: ref and Pallas(interpret) vs the unfused lockstep path
+# ---------------------------------------------------------------------------
+def _scan_rounds(fn, lanes, rounds, seed, nodes=64):
+    tree0 = init_tree(DOM, nodes)
+    def body(tree, rng):
+        tree, sel = fn(tree, lanes, rng)
+        return tree, sel["dup"].sum()
+    rngs = jax.random.split(jax.random.key(seed), rounds)
+    return jax.lax.scan(body, tree0, rngs)
+
+
+def _unfused_round(tree, lanes, rng):
+    sp = S.SearchParams(cp=SP.cp, max_depth=SP.max_depth, kernels="ref",
+                        wave_select="lockstep")
+    tree, sel = S.select_wave(tree, sp, lanes, jnp.asarray(True))
+    tree, exps = S.expand_wave(tree, DOM, sp, sel)
+    po = S.playout_wave(DOM, sp, exps, rng)
+    return S.backup_wave(tree, po), sel
+
+
+@pytest.mark.parametrize("lanes", (1, 4, 8))
+def test_ref_fused_round_bitwise_equals_unfused(lanes):
+    ta, da = _scan_rounds(_unfused_round, lanes, 6, 0)
+    tb, db = _scan_rounds(
+        lambda t, l, r: ref.tree_round(t, DOM, SP, l, jnp.asarray(True), r),
+        lanes, 6, 0)
+    _assert_same(ta, tb)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+
+
+@pytest.mark.parametrize("lanes", (1, 4, 8))
+def test_pallas_interpret_round_bitwise_equals_ref(lanes):
+    ta, da = _scan_rounds(
+        lambda t, l, r: ref.tree_round(t, DOM, SP, l, jnp.asarray(True), r),
+        lanes, 6, 0)
+    tb, db = _scan_rounds(
+        lambda t, l, r: ops.tree_round(t, DOM, SP, l, jnp.asarray(True), r,
+                                       impl="pallas", interpret=True),
+        lanes, 6, 0)
+    _assert_same(ta, tb)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+
+
+def _scan_ticks(fn, lanes, ticks, seed, nodes=64):
+    tree = init_tree(DOM, nodes)
+    carry = (tree, S.empty_selection(SP, lanes),
+             S.empty_expansion(SP, lanes, DOM),
+             S.empty_playout(SP, lanes, DOM.num_actions))
+    def body(c, inp):
+        t, rng = inp
+        tree, se, ep, pb = c
+        tree, se, ep, pb = fn(tree, lanes, t < ticks - 3, se, ep, pb, rng)
+        return (tree, se, ep, pb), se["dup"].sum()
+    rngs = jax.random.split(jax.random.key(seed), ticks)
+    (tree, *_), dups = jax.lax.scan(body, carry, (jnp.arange(ticks), rngs))
+    return tree, dups
+
+
+def _unfused_tick(tree, lanes, wave_valid, se, ep, pb, rng):
+    sp = S.SearchParams(cp=SP.cp, max_depth=SP.max_depth, kernels="ref",
+                        wave_select="lockstep")
+    tree = S.backup_wave(tree, pb)
+    new_pb = S.playout_wave(DOM, sp, ep, rng)
+    tree, new_ep = S.expand_wave(tree, DOM, sp, se)
+    tree, new_se = S.select_wave(tree, sp, lanes, wave_valid)
+    return tree, new_se, new_ep, new_pb
+
+
+@pytest.mark.parametrize("lanes", (1, 4, 8))
+def test_ref_fused_tick_bitwise_equals_unfused(lanes):
+    ta, da = _scan_ticks(_unfused_tick, lanes, 9, 1)
+    tb, db = _scan_ticks(
+        lambda t, l, wv, se, ep, pb, r:
+            ref.pipeline_tick(t, DOM, SP, l, wv, se, ep, pb, r),
+        lanes, 9, 1)
+    _assert_same(ta, tb)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+
+
+@pytest.mark.parametrize("lanes", (1, 4, 8))
+def test_pallas_interpret_tick_bitwise_equals_ref(lanes):
+    ta, da = _scan_ticks(
+        lambda t, l, wv, se, ep, pb, r:
+            ref.pipeline_tick(t, DOM, SP, l, wv, se, ep, pb, r),
+        lanes, 9, 1)
+    tb, db = _scan_ticks(
+        lambda t, l, wv, se, ep, pb, r:
+            ops.pipeline_tick(t, DOM, SP, l, wv, se, ep, pb, r,
+                              impl="pallas", interpret=True),
+        lanes, 9, 1)
+    _assert_same(ta, tb)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+
+
+# ---------------------------------------------------------------------------
+# strategy surface: all five run under "mega"; lanes==1 equals lockstep
+# ---------------------------------------------------------------------------
+ALL_METHODS = ("sequential", "root", "leaf", "tree", "pipeline")
+
+
+def _run(method, ws, lanes, seed=0, budget=64):
+    sp = SearchParams(cp=0.7, max_depth=6, wave_select=ws, kernels="ref")
+    cfg = SearchConfig(method=method, budget=budget, lanes=lanes, params=sp)
+    return jax.jit(lambda r: search(DOM, cfg, r))(jax.random.key(seed))
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_mega_equals_lockstep_at_lanes1(method):
+    """The ISSUE acceptance bar: every strategy under the fused wave is
+    bit-for-bit its lockstep self at lanes == 1.  (sequential/root/leaf
+    never route wave ops — for them this is a does-not-perturb guard.)"""
+    a = _run(method, "lockstep", 1)
+    b = _run(method, "mega", 1)
+    np.testing.assert_array_equal(np.asarray(a.action_visits),
+                                  np.asarray(b.action_visits))
+    np.testing.assert_array_equal(np.asarray(a.action_value),
+                                  np.asarray(b.action_value))
+    assert int(a.best_action) == int(b.best_action)
+    if a.tree is not None:
+        _assert_same(a.tree, b.tree)
+    for k in a.stats:
+        assert int(a.stats[k]) == int(b.stats[k]), k
+
+
+@pytest.mark.parametrize("method", ("tree", "pipeline"))
+@pytest.mark.parametrize("lanes", (4, 8))
+def test_mega_equals_lockstep_at_wave_widths(method, lanes):
+    """On the uint32-hash PGame domain the vectorized expand is bitwise the
+    scanned expand even at real wave widths — not just statistically."""
+    a = _run(method, "lockstep", lanes, budget=128)
+    b = _run(method, "mega", lanes, budget=128)
+    _assert_same(a.tree, b.tree)
+    for k in a.stats:
+        assert int(a.stats[k]) == int(b.stats[k]), k
+
+
+@pytest.mark.parametrize("lanes", (1, 8))
+def test_mega_invariants(lanes):
+    res = _run("pipeline", "mega", lanes, budget=128)
+    c = check_consistency(res.tree)
+    assert bool(c["vloss_drained"]), c
+    assert bool(c["visit_flow"]), c
+    assert bool(c["parents_valid"]), c
+    assert int(res.tree.visits[ROOT]) == 128

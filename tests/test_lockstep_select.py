@@ -44,12 +44,26 @@ def _run(method, ws, lanes, budget=128, seed=0, **kw):
 # ---------------------------------------------------------------------------
 def test_wave_select_resolution():
     assert SearchParams().resolved_wave_select == "scan"
-    assert SearchParams(use_pallas=True).resolved_wave_select == "lockstep"
-    assert SearchParams(wave_select="scan",
-                        use_pallas=True).resolved_wave_select == "scan"
+    # deprecated boolean forwards into the consolidated kernels knob; with
+    # Pallas kernels the auto wave_select is the fused megakernel (§14)
+    with pytest.warns(DeprecationWarning):
+        sp = SearchParams(use_pallas=True)
+    assert sp.resolved_kernels == "pallas"
+    assert sp.resolved_wave_select == "mega"
+    with pytest.warns(DeprecationWarning):
+        sp = SearchParams(wave_select="scan", use_pallas=True)
+    assert sp.resolved_wave_select == "scan"
     assert SearchParams(wave_select="lockstep").resolved_wave_select == "lockstep"
+    assert SearchParams(kernels="pallas").resolved_wave_select == "mega"
+    assert SearchParams(kernels="ref").resolved_wave_select == "scan"
+    # explicit kernels wins over the deprecated boolean
+    with pytest.warns(DeprecationWarning):
+        sp = SearchParams(kernels="ref", use_pallas=True)
+    assert sp.resolved_kernels == "ref"
     with pytest.raises(ValueError, match="wave_select"):
         _ = SearchParams(wave_select="nope").resolved_wave_select
+    with pytest.raises(ValueError, match="kernels"):
+        _ = SearchParams(kernels="nope").resolved_kernels
 
 
 # ---------------------------------------------------------------------------

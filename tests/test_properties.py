@@ -297,3 +297,115 @@ def test_elastic_merge_is_partition_and_failure_invariant(
         assert int(drv.report.runs.max()) <= 2
     else:
         assert all(drv.report.runs == 1)
+
+
+# ---------------------------------------------------------------------------
+# arena allocator properties (DESIGN.md §14: typed SoA arena + free-list)
+# ---------------------------------------------------------------------------
+def _arena_fixture(seed, n, a, grows, releases):
+    """Grow a random tree in an arena, then release a random set of leaf
+    rows.  Returns (arena, released_rows) as host-side values."""
+    from repro.core.arena import UNEXPANDED, alloc, init_arena, release
+    rng = np.random.default_rng(seed)
+    ar = init_arena({"v": jnp.int32(0)}, a, n)
+    live = [0]
+    for _ in range(grows):
+        parent = int(rng.choice(live))
+        ch = np.asarray(ar.children[parent])
+        free = np.flatnonzero(ch == UNEXPANDED)
+        if free.size == 0:
+            continue
+        slot = int(rng.choice(free))
+        ar, row, ok = alloc(ar)
+        if not bool(ok):
+            break
+        ar = ar.replace(
+            children=ar.children.at[parent, slot].set(row),
+            parent=ar.parent.at[row].set(parent),
+            action=ar.action.at[row].set(slot),
+            visits=ar.visits.at[row].set(int(rng.integers(1, 9))))
+        live.append(int(row))
+    ch = np.asarray(ar.children)
+    leaves = [r for r in live if r != 0 and (ch[r] == UNEXPANDED).all()]
+    rng.shuffle(leaves)
+    drop = leaves[:releases]
+    for r in drop:
+        p = int(np.asarray(ar.parent[r]))
+        s = int(np.asarray(ar.action[r]))
+        ar = ar.replace(children=ar.children.at[p, s].set(UNEXPANDED))
+        ar = release(ar, jnp.int32(r))
+    return ar, drop
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 24),
+       grows=st.integers(0, 30), releases=st.integers(0, 6))
+def test_alloc_never_aliases_a_live_row(seed, n, grows, releases):
+    """Whatever the alloc/release history, the next alloc returns either a
+    row that is currently dead or the full-arena drop sentinel."""
+    from repro.core.arena import alloc, live_mask
+    ar, _ = _arena_fixture(seed, n, 3, grows, releases)
+    alive = np.asarray(live_mask(ar))
+    ar2, row, ok = alloc(ar)
+    if bool(ok):
+        assert 0 < int(row) < n
+        assert not alive[int(row)]
+    else:
+        assert int(row) == n            # mode="drop" sentinel
+        assert int(ar2.next_free) == int(ar.next_free)
+        assert int(ar2.free_top) == int(ar.free_top)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(6, 24),
+       grows=st.integers(4, 30), releases=st.integers(1, 6))
+def test_release_then_alloc_reuses_without_corrupting_survivors(
+        seed, n, grows, releases):
+    """Released rows come back LIFO; draining the free-list never touches
+    any surviving row's planes."""
+    from repro.core.arena import alloc, live_mask
+    ar, dropped = _arena_fixture(seed, n, 3, grows, releases)
+    if not dropped:
+        return
+    before = {f: np.asarray(getattr(ar, f)).copy()
+              for f in ("visits", "value", "parent", "action", "children")}
+    survivors = np.flatnonzero(np.asarray(live_mask(ar)))
+    got = []
+    for _ in range(len(dropped)):
+        ar, row, ok = alloc(ar)
+        assert bool(ok)
+        got.append(int(row))
+    assert got == dropped[::-1]         # LIFO pop order
+    assert sorted(got) == sorted(dropped)
+    for f, b in before.items():
+        np.testing.assert_array_equal(np.asarray(getattr(ar, f))[survivors],
+                                      b[survivors], err_msg=f)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 4))
+def test_iterated_reroot_keeps_occupancy_bounded(seed, steps):
+    """Re-rooting recycles the abandoned siblings: after every reroot the
+    arena is dense (next_free == live, free list empty) and occupancy
+    never exceeds what the previous tree held."""
+    from repro.core.arena import (ROOT, arena_stats, live_mask, reroot,
+                                  reroot_ok)
+    from repro.core.tree import check_consistency
+    rng = np.random.default_rng(seed)
+    ar, _ = _arena_fixture(int(rng.integers(2**31)), 24, 3, 40, 0)
+    for _ in range(steps):
+        ch = np.asarray(ar.children[ROOT])
+        cand = np.flatnonzero(ch >= 0)
+        if cand.size == 0:
+            break
+        act = jnp.int32(int(rng.choice(cand)))
+        assert bool(reroot_ok(ar, act))
+        prev_live = int(np.asarray(live_mask(ar)).sum())
+        ar = reroot(ar, act)
+        stt = jax.tree_util.tree_map(int, arena_stats(ar))
+        assert stt["live"] <= prev_live
+        assert stt["next_free"] == stt["live"]      # dense after compact
+        assert stt["free_top"] == 0
+        assert stt["live"] + stt["capacity_left"] == ar.max_nodes
+        c = check_consistency(ar)
+        assert bool(c["parents_valid"]) and bool(c["vloss_drained"])

@@ -1,15 +1,21 @@
-"""Cross-token subtree reuse + commit-time KV splice (DESIGN.md §12).
+"""Cross-token subtree reuse + commit-time KV splice (DESIGN.md §12/§14).
 
 Invariants under test:
 
 * ``warm_start_root(tree, empty_root_carry(A))`` is bit-for-bit the
   identity, so a search seeded with the identity carry equals a cold
-  search exactly — the admission reset in serving is free of drift.
-* ``reroot`` compacts exactly the chosen child's N/W, prior row and
-  grandchild stats, with the identity fallback on unexpanded children.
-* The searcher-threaded carry equals the explicit path — a search whose
-  domain is seeded with the carried visit counts — bit-for-bit on both
-  the emitted tokens and the carried statistics (the acceptance parity).
+  search exactly (the statistic-level RootCarry rung, kept as
+  ``root_carry``).
+* Arena ``reroot`` promotes the committed child's subtree to row 0 and
+  recycles every abandoned row through the free-list; ``reroot_ok`` gates
+  unexpanded children.
+* The searcher-threaded arena carry is the complete cross-token state: a
+  fresh searcher seeded with the carried arena/action reproduces the
+  threaded searcher's next step bit-for-bit.
+* Soak: across >= 50 committed tokens with ``tree_reuse=True`` the arena
+  occupancy stays bounded — ``next_free`` never exceeds the fixed capacity
+  and plateaus (recycling works; no leak), even though cumulative
+  allocations far exceed capacity.
 * ``kv_splice`` changes no decisions: spliced decode == cold cached
   decode, token for token (prefill == prefill-then-step, the PR-4
   invariant).
@@ -23,9 +29,11 @@ import pytest
 
 jax.config.update("jax_default_matmul_precision", "highest")
 
+from repro.core.arena import arena_stats, live_mask  # noqa: E402
 from repro.core.domains.lm_decode import CachedLMDecodeDomain  # noqa: E402
 from repro.core.tree import (ROOT, UNEXPANDED, empty_root_carry,  # noqa: E402
-                             init_tree, reroot, warm_start_root)
+                             init_tree, reroot, reroot_ok, root_carry,
+                             warm_start_root)
 from repro.search import SearchConfig, SearchParams, search, search_batch  # noqa: E402
 from repro.models.base import ModelConfig, get_family  # noqa: E402
 from repro.serving import (MCTSDecodeConfig, ReusableSearcher,  # noqa: E402
@@ -56,9 +64,10 @@ def _domain(params, prompt, plen, **extra):
         prompt_len=jnp.int32(plen), **extra)
 
 
-def _scfg():
+def _scfg(**kw):
     return SearchConfig(method="pipeline", budget=8, lanes=2, keep_tree=True,
-                        params=SearchParams(cp=1.0, max_depth=3, puct=True))
+                        params=SearchParams(cp=1.0, max_depth=3, puct=True),
+                        **kw)
 
 
 def _assert_trees_equal(t1, t2):
@@ -88,7 +97,15 @@ def test_stateful_flag():
     assert _dcfg(tree_reuse=True).stateful
 
 
-# -- warm-start identity -----------------------------------------------------
+def test_tree_reuse_pins_arena_capacity():
+    d = _dcfg(tree_reuse=True)
+    assert d.search_config().max_nodes == d.resolved_arena_nodes == 18
+    assert _dcfg().search_config().max_nodes == 0
+    assert _dcfg(tree_reuse=True,
+                 arena_nodes=33).search_config().max_nodes == 33
+
+
+# -- warm-start identity (statistic-level rung, DESIGN.md §12) ---------------
 
 def test_identity_carry_is_bitwise_noop(params):
     dom = _domain(params, [1, 2, 3, 0, 0], 3)
@@ -110,110 +127,151 @@ def test_identity_warm_search_equals_cold_search(params):
     _assert_trees_equal(cold.tree, warm.tree)
 
 
-# -- reroot ------------------------------------------------------------------
+def test_dead_arena_splice_is_bitwise_cold(params):
+    """A domain carrying an arena with ``root_arena_alive=False`` searches
+    exactly cold — the serving searcher's dead-slot path is drift-free."""
+    prompt = [1, 2, 3, 0, 0, 0]
+    rng = jax.random.key(9)
+    cold = search(_domain(params, prompt, 3), _scfg(), rng)
+    garbage = jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x), cold.tree)
+    masked = search(
+        _domain(params, prompt, 3, root_arena=garbage,
+                root_arena_alive=jnp.asarray(False)),
+        _scfg(), rng)
+    assert int(cold.best_action) == int(masked.best_action)
+    _assert_trees_equal(cold.tree, masked.tree)
 
-def test_reroot_extracts_child_statistics(params):
+
+# -- root_carry (the renamed statistic compaction) ---------------------------
+
+def _hand_tree(params):
+    """root -> children [1, 2, -]; node 1 -> child 3."""
     dom = _domain(params, [1, 2, 3, 0, 0], 3)
     tree = init_tree(dom, max_nodes=8)
-    # hand-build: root has children [1, 2, -1]; node 1 has child 3
-    tree["children"] = tree["children"].at[ROOT].set(
-        jnp.array([1, 2, UNEXPANDED]))
-    tree["children"] = tree["children"].at[1].set(
-        jnp.array([3, UNEXPANDED, UNEXPANDED]))
-    tree["visits"] = tree["visits"].at[jnp.array([1, 2, 3])].set(
-        jnp.array([5, 2, 4]))
-    tree["value"] = tree["value"].at[jnp.array([1, 2, 3])].set(
-        jnp.array([2.5, 1.0, 2.0]))
-    tree["prior"] = tree["prior"].at[1].set(jnp.array([0.5, 0.3, 0.2]))
-    c = jax.tree_util.tree_map(np.asarray, reroot(tree, jnp.int32(0)))
+    return tree.replace(
+        children=tree.children
+        .at[ROOT].set(jnp.array([1, 2, UNEXPANDED]))
+        .at[1].set(jnp.array([3, UNEXPANDED, UNEXPANDED])),
+        parent=tree.parent.at[jnp.array([1, 2, 3])].set(
+            jnp.array([0, 0, 1])),
+        action=tree.action.at[jnp.array([1, 2, 3])].set(
+            jnp.array([0, 1, 0])),
+        visits=tree.visits.at[jnp.array([1, 2, 3])].set(
+            jnp.array([5, 2, 4])),
+        value=tree.value.at[jnp.array([1, 2, 3])].set(
+            jnp.array([2.5, 1.0, 2.0])),
+        prior=tree.prior.at[1].set(jnp.array([0.5, 0.3, 0.2])),
+        next_free=jnp.asarray(4, jnp.int32))
+
+
+def test_root_carry_extracts_child_statistics(params):
+    tree = _hand_tree(params)
+    c = jax.tree_util.tree_map(np.asarray, root_carry(tree, jnp.int32(0)))
     assert c["visits"] == 5 and c["value"] == 2.5
     np.testing.assert_allclose(c["prior"], [0.5, 0.3, 0.2])
     np.testing.assert_array_equal(c["child_visits"], [4, 0, 0])
     np.testing.assert_allclose(c["child_value"], [2.0, 0.0, 0.0])
 
 
-def test_reroot_on_unexpanded_child_is_identity_carry(params):
+def test_root_carry_on_unexpanded_child_is_identity_carry(params):
     dom = _domain(params, [1, 2, 3, 0, 0], 3)
     tree = init_tree(dom, max_nodes=8)        # root has no children yet
-    c = reroot(tree, jnp.int32(1))
+    c = root_carry(tree, jnp.int32(1))
     iden = empty_root_carry(A)
     _assert_trees_equal(jax.tree_util.tree_map(np.asarray, c),
                         jax.tree_util.tree_map(np.asarray, iden))
 
 
-def test_warm_start_root_blends_prior_with_grandchild_visits(params):
+# -- arena reroot (full subtree reuse, DESIGN.md §14) ------------------------
+
+def test_arena_reroot_promotes_child_and_recycles(params):
+    tree = _hand_tree(params)
+    assert bool(reroot_ok(tree, jnp.int32(0)))
+    r = reroot(tree, jnp.int32(0))
+    # committed child (old row 1) is the new root at row 0
+    assert int(r.visits[ROOT]) == 5
+    assert float(r.value[ROOT]) == 2.5
+    np.testing.assert_allclose(np.asarray(r.prior[ROOT]), [0.5, 0.3, 0.2])
+    assert int(r.parent[ROOT]) == -1
+    # its grandchild (old row 3, visits 4) came along, remapped in-range
+    ch = np.asarray(r.children[ROOT])
+    assert ch[1] == -1 and ch[2] == -1 and ch[0] >= 0
+    assert int(r.visits[ch[0]]) == 4
+    assert int(r.parent[ch[0]]) == ROOT
+    # exactly 2 rows live; everything else (old root, sibling 2) recycled
+    st = jax.tree_util.tree_map(int, arena_stats(r))
+    assert st["live"] == 2
+    assert st["next_free"] == 2
+    assert st["capacity_left"] == tree.max_nodes - 2
+
+
+def test_reroot_ok_gates_unexpanded_child(params):
     dom = _domain(params, [1, 2, 3, 0, 0], 3)
     tree = init_tree(dom, max_nodes=8)
-    carry = {"visits": jnp.int32(6), "value": jnp.float32(3.0),
-             "prior": jnp.array([0.5, 0.25, 0.25]),
-             "child_visits": jnp.array([4, 1, 0], jnp.int32),
-             "child_value": jnp.array([2.0, 0.5, 0.0])}
-    t = warm_start_root(tree, carry)
-    assert int(t["visits"][ROOT]) == 6
-    assert float(t["value"][ROOT]) == 3.0
-    np.testing.assert_allclose(
-        np.asarray(t["prior"][ROOT]),
-        np.array([4.5, 1.25, 0.25]) / 6.0, rtol=1e-6)
+    assert not bool(reroot_ok(tree, jnp.int32(1)))
 
 
-# -- searcher-threaded carry == explicitly seeded search (acceptance) --------
+def test_reroot_after_real_search_keeps_invariants(params):
+    res = search(_domain(params, [1, 2, 3, 0, 0, 0], 3), _scfg(),
+                 jax.random.key(3))
+    tree = res.tree
+    act = res.best_action
+    if not bool(reroot_ok(tree, act)):
+        pytest.skip("best child unexpanded at this seed")
+    r = reroot(tree, act)
+    alive = np.asarray(live_mask(r))
+    n_live = int(alive.sum())
+    assert int(r.next_free) == n_live          # dense after compaction
+    assert int(r.free_top) == 0
+    # parents of live non-root rows are live and in-range
+    par = np.asarray(r.parent)
+    for i in np.nonzero(alive)[0]:
+        if i == ROOT:
+            assert par[i] == -1
+        else:
+            assert 0 <= par[i] < r.max_nodes and alive[par[i]]
 
-def test_searcher_carry_matches_explicitly_seeded_search(params):
-    """Thread the carry through ReusableSearcher for two tokens; replay the
-    same two searches with the carried statistics seeded explicitly into a
-    fresh domain.  Tokens and carried visit counts must match bit-for-bit;
-    float leaves (value sums, priors) to tight tolerance — the searcher
-    fuses its search into one XLA program with the token/reroot ops while
-    the replay runs ``search_batch`` standalone, and fusion may differ in
-    the last ulp.  (The fully-bitwise seeded-carry check is the test
-    below, which routes both runs through the same compiled step.)
-    """
+
+# -- searcher-threaded arena carry (acceptance parity) -----------------------
+
+def test_searcher_carry_is_the_search_tree(params):
+    """The carry after a step holds exactly the searched arenas and the
+    committed actions — verified against a standalone ``search_batch`` of
+    the same cold domains."""
     dcfg = _dcfg(tree_reuse=True, kv_splice=False)
     scfg = dcfg.search_config()
     assert scfg.keep_tree
-    prompt = np.array([1, 2, 3], np.int32)
     buf = np.zeros((1, 6), np.int32)
-    buf[0, :3] = prompt
+    buf[0, :3] = [1, 2, 3]
     lens = np.array([3], np.int32)
 
     searcher = make_batched_searcher(CFG, params, dcfg, batch=1, mesh=False)
     assert isinstance(searcher, ReusableSearcher)
     carry = searcher.init_carry(buf.shape[1])
     carry = searcher.admit(carry, 0, buf[0], 3)
+    assert not bool(np.asarray(carry["alive"][0]))
 
-    rng1, rng2 = jax.random.key(11), jax.random.key(12)
-    explicit = empty_root_carry(A)            # what admit seeds
-    for tok_rng in (rng1, rng2):
-        toks, carry = searcher.step(buf, lens, tok_rng, carry)
-        # explicit path: same batched search, carry seeded via the domain
-        dom = CachedLMDecodeDomain(
-            cfg=CFG, params=params, prompt=jnp.asarray(buf[0]),
-            num_actions=A, search_depth=dcfg.search_depth,
-            rollout_len=dcfg.rollout_len, prompt_len=jnp.int32(lens[0]),
-            root_warm=explicit)
-        res = search_batch([dom], scfg, tok_rng)
-        tree0 = jax.tree_util.tree_map(lambda x: x[0], res.tree)
-        explicit = reroot(tree0, res.best_action[0])
-        _, top = dom._topk(dom.root_state())
-        assert int(toks[0]) == int(top[int(res.best_action[0])])
-        got = jax.tree_util.tree_map(lambda x: np.asarray(x[0]),
-                                     carry["warm"])
-        want = jax.tree_util.tree_map(np.asarray, explicit)
-        for key in ("visits", "child_visits"):              # bit-for-bit
-            np.testing.assert_array_equal(got[key], want[key], err_msg=key)
-        for key in ("value", "prior", "child_value"):
-            np.testing.assert_allclose(got[key], want[key],
-                                       rtol=1e-5, atol=1e-6, err_msg=key)
-        buf[0, lens[0]] = int(toks[0])
-        lens[0] += 1
+    rng = jax.random.key(11)
+    toks, carry = searcher.step(buf, lens, rng, carry)
+    dom = _domain(params, buf[0], 3)
+    res = search_batch([dom], scfg, rng)
+    assert bool(np.asarray(carry["alive"][0]))
+    assert int(carry["action"][0]) == int(res.best_action[0])
+    _, top = dom._topk(dom.root_state())
+    assert int(toks[0]) == int(top[int(res.best_action[0])])
+    for key in ("visits", "children", "parent", "next_free", "free_top"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(carry["arena"], key)),
+            np.asarray(getattr(res.tree, key)), err_msg=key)
 
 
 def test_seeded_carry_reproduces_threaded_run_bitwise(params):
-    """The acceptance parity, fully bitwise: a FRESH searcher whose
-    identity carry is overwritten with the carried statistics (the seeded
-    cold search) must reproduce the threaded searcher's next step exactly —
-    same token, same carried stats, every leaf bit-for-bit.  Proves the
-    carry is the complete cross-token state: nothing rides outside it."""
+    """The acceptance parity, fully bitwise: a FRESH searcher whose carry is
+    overwritten with the threaded searcher's arena/action/alive must
+    reproduce its next step exactly — same token, same carried arena, every
+    leaf bit-for-bit.  Proves the carry is the complete cross-token state:
+    nothing rides outside it."""
     dcfg = _dcfg(tree_reuse=True, kv_splice=False)
     buf = np.zeros((1, 6), np.int32)
     buf[0, :3] = [1, 2, 3]
@@ -228,13 +286,13 @@ def test_seeded_carry_reproduces_threaded_run_bitwise(params):
     # threaded side: continue with the carry in hand
     tok2, carry2 = searcher.step(buf, lens, jax.random.key(22), carry)
 
-    # seeded side: fresh searcher, identity carry overwritten with the
-    # carried visit counts/values — i.e. a cold search explicitly seeded
+    # seeded side: fresh searcher, carry overwritten with the carried arena
     fresh = make_batched_searcher(CFG, params, dcfg, batch=1, mesh=False)
     seeded = fresh.init_carry(buf.shape[1])
     seeded = fresh.admit(seeded, 0, buf[0], int(lens[0]))
     seeded = dict(seeded)
-    seeded["warm"] = jax.tree_util.tree_map(jnp.asarray, carry["warm"])
+    for k in ("arena", "action", "alive"):
+        seeded[k] = jax.tree_util.tree_map(jnp.asarray, carry[k])
     tok2b, carry2b = fresh.step(buf, lens, jax.random.key(22), seeded)
 
     assert int(tok2[0]) == int(tok2b[0])
@@ -245,14 +303,51 @@ def test_seeded_carry_reproduces_threaded_run_bitwise(params):
 
 def test_reused_decode_differs_then_identity_at_zero(params):
     """tree_reuse deliberately changes exploration after the first token
-    (warm priors), but the FIRST token of every request — searched from the
-    identity carry — matches the cold path exactly."""
+    (carried subtree), but the FIRST token of every request — searched from
+    a dead carry — matches the cold path exactly."""
     prompts = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
     cold = mcts_decode_batch(CFG, params, prompts, 3, _dcfg(), seed=0)
     warm = mcts_decode_batch(CFG, params, prompts, 3,
                              _dcfg(tree_reuse=True), seed=0)
     for c, w in zip(cold, warm):
         assert c[0] == w[0]
+
+
+# -- soak: bounded arena occupancy across a request lifetime -----------------
+
+def test_soak_arena_occupancy_bounded_50_tokens(params):
+    """>= 50 committed tokens through one reused slot.  Cumulative
+    allocations (~budget per token, 400+) dwarf the fixed capacity (18), so
+    staying under it proves rows really recycle; ``next_free`` must also
+    plateau (no slow leak), and the final arena must still be consistent."""
+    n_tok = 50
+    dcfg = _dcfg(tree_reuse=True, search_depth=3, rollout_len=1)
+    cap = dcfg.resolved_arena_nodes
+    buf = np.zeros((1, 3 + n_tok), np.int32)
+    buf[0, :3] = [1, 2, 3]
+    lens = np.array([3], np.int32)
+    searcher = make_batched_searcher(CFG, params, dcfg, batch=1, mesh=False)
+    carry = searcher.init_carry(buf.shape[1])
+    carry = searcher.admit(carry, 0, buf[0], 3)
+    rng = jax.random.key(0)
+    nf_trace, live_trace = [], []
+    for _ in range(n_tok):
+        rng, sub = jax.random.split(rng)
+        toks, carry = searcher.step(buf, lens, sub, carry)
+        ar = jax.tree_util.tree_map(lambda x: x[0], carry["arena"])
+        st = jax.tree_util.tree_map(int, arena_stats(ar))
+        assert st["next_free"] <= cap, (st, len(nf_trace))
+        assert st["free_top"] >= 0
+        assert st["live"] <= cap
+        nf_trace.append(st["next_free"])
+        live_trace.append(st["live"])
+        buf[0, lens[0]] = int(toks[0])
+        lens[0] += 1
+    assert len(nf_trace) == n_tok
+    # plateau: the high-water mark of the 2nd half never exceeds the 1st's
+    assert max(nf_trace[n_tok // 2:]) <= max(nf_trace[:n_tok // 2]), nf_trace
+    # the slot stayed warm and kept a real subtree alive throughout
+    assert min(live_trace[1:]) >= 1
 
 
 # -- kv splice ---------------------------------------------------------------

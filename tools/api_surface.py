@@ -1,11 +1,19 @@
 """API-surface checker: ``repro.search`` is the only place allowed to grow
-public search entry points.
+public search entry points, and ``repro.core.arena`` is the only place
+allowed to subscript tree planes by string key.
 
-Fails (exit 1) if any module under ``src/repro`` *outside* ``repro/search``
-defines a new module-level public ``run_*`` function.  The non-search
-``run_*`` helpers that predate this policy are pinned in ``ALLOWED``;
-removing one is fine, adding one is not — add new strategies via
-``repro.search.register_strategy`` instead (DESIGN.md §8).
+Fails (exit 1) if
+
+* any module under ``src/repro`` *outside* ``repro/search`` defines a new
+  module-level public ``run_*`` function.  The non-search ``run_*`` helpers
+  that predate this policy are pinned in ``ALLOWED``; removing one is fine,
+  adding one is not — add new strategies via
+  ``repro.search.register_strategy`` instead (DESIGN.md §8); or
+* any module under ``src/repro`` outside ``PLANE_ALLOWED`` subscripts a
+  tree plane dict-style (``tree["visits"]`` etc.).  The tree is a typed
+  ``TreeArena`` now (DESIGN.md §14) — use attribute access
+  (``tree.visits``) / ``tree.replace(...)``.  The ``__getitem__`` shim
+  exists only for out-of-repo callers and warns ``DeprecationWarning``.
 
 Usage:  python tools/api_surface.py [--root PATH]
 """
@@ -26,16 +34,43 @@ ALLOWED = {
 
 DEF_RE = re.compile(r"^def (run_\w+)\s*\(", re.MULTILINE)
 
+# TreeArena plane names: dict-style subscripts on these are banned in src/
+# outside the arena itself (the shim's own definition lives there).  Names
+# the stage buffers / serving carries legitimately use as dict keys
+# ("value", "state", "action", ...) are deliberately NOT policed — the set
+# below is unambiguous to the arena.
+PLANES = ("visits", "vloss", "children", "next_free", "free_list",
+          "free_top", "terminal", "prior")
+# arena.py/tree.py own the shim; search_wave/ops.py stages planes into a
+# plain dict of kernel operands (2-D views, not the tree) keyed by plane.
+PLANE_ALLOWED = {"repro/core/arena.py", "repro/core/tree.py",
+                 "repro/kernels/search_wave/ops.py"}
+# a dict literal key ({"prior": ...}) or .get() is not a subscript — the
+# regex targets ``<expr>["plane"]`` via the closing-bracket/name prefix.
+PLANE_CTX_RE = re.compile(
+    r"""[\w\)\]]\s*\[\s*['"](%s)['"]\s*\]""" % "|".join(PLANES))
+
 
 def check(src_root: pathlib.Path) -> list:
     violations = []
     for path in sorted(src_root.rglob("*.py")):
         rel = path.relative_to(src_root).as_posix()
-        if rel.startswith("repro/search/"):
-            continue
-        found = set(DEF_RE.findall(path.read_text()))
-        extra = found - ALLOWED.get(rel, set())
-        violations.extend((rel, name) for name in sorted(extra))
+        text = path.read_text()
+        if not rel.startswith("repro/search/"):
+            found = set(DEF_RE.findall(text))
+            extra = found - ALLOWED.get(rel, set())
+            violations.extend(
+                (rel, f"new public search entry point {name!r} — register "
+                      "a strategy in repro.search instead")
+                for name in sorted(extra))
+        if rel not in PLANE_ALLOWED:
+            for i, line in enumerate(text.splitlines(), 1):
+                m = PLANE_CTX_RE.search(line)
+                if m:
+                    violations.append(
+                        (rel, f"line {i}: dict-style tree plane access "
+                              f'[{m.group(1)!r}] — the tree is a typed '
+                              "TreeArena; use attribute access / .replace()"))
     return violations
 
 
@@ -47,12 +82,12 @@ def main(argv=None) -> int:
     root = pathlib.Path(args.root) if args.root else \
         pathlib.Path(__file__).resolve().parent.parent
     violations = check(root / "src")
-    for rel, name in violations:
-        print(f"api_surface: {rel}: new public search entry point {name!r} — "
-              "register a strategy in repro.search instead", file=sys.stderr)
+    for rel, msg in violations:
+        print(f"api_surface: {rel}: {msg}", file=sys.stderr)
     if violations:
         return 1
-    print("api_surface: OK — repro.search is the only public search API")
+    print("api_surface: OK — repro.search is the only public search API; "
+          "tree planes are attribute-only outside core/arena.py")
     return 0
 
 
