@@ -23,6 +23,7 @@ MODULES = [
     "playout_speedup",       # §II def. 1
     "strength_speedup",      # §II def. 2 + §IV baselines
     "search_overhead",       # §III-B
+    "strength_bench",        # wu vs vloss at equal wall-clock (DESIGN §15)
     "mcts_decode_bench",     # modern instantiation (NN playouts)
     "serving_bench",         # request lifecycle: cold vs KV-splice+reuse
     "shard_scaling",         # batch axis over a device mesh (DESIGN.md §9)

@@ -1,0 +1,83 @@
+"""Best-action-found rate at equal wall-clock (WU-UCT vs virtual loss,
+DESIGN.md §15): {scan, vloss-lockstep, wu-lockstep} x lanes {4, 8} on the
+P-game through the *pipeline* strategy — the one CPU-visible path where
+playouts stay in flight across Select calls, so the two ``vl_mode``
+bookkeepings actually diverge (tree-lockstep drains every round and the
+modes coincide bit-for-bit there).
+
+Equal wall-clock protocol:
+
+* ``vloss_lockstep`` and ``wu_lockstep`` run the SAME budget — the two
+  modes trace the same compute graph (one in-flight plane, one formula
+  branch), so equal budget IS equal wall-clock, and their comparison is
+  seed-deterministic (no timing noise in the gate);
+* ``scan`` is re-budgeted so its measured search time matches lockstep's
+  (calibrated per lanes count, clamped to [B/2, 2B] against CI jitter) —
+  informational, not gated.
+
+CI gates ``strength(wu_lockstep) >= strength(vloss_lockstep)`` on the
+smoke row (lanes=8): removing the virtual-loss Q corruption must not cost
+strength at equal compute.  cp=0.1 keeps selection exploit-heavy, where
+corrupted Q actually changes decisions.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.domains.pgame import PGameDomain, optimal_root_action
+from repro.search import SearchConfig, SearchParams, search
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=11)
+CP = 0.1
+BUDGET = 96
+METHOD = "pipeline"
+
+
+def _cfg(ws: str, vl_mode: str, lanes: int, budget: int) -> SearchConfig:
+    sp = SearchParams(cp=CP, max_depth=6, wave_select=ws, vl_mode=vl_mode)
+    return SearchConfig(method=METHOD, budget=budget, lanes=lanes,
+                        params=sp, keep_tree=False)
+
+
+def _searcher(cfg: SearchConfig):
+    fn = jax.jit(lambda r: search(DOM, cfg, r).action_visits)
+    fn(jax.random.key(0)).block_until_ready()      # compile outside timing
+    return fn
+
+
+def _time_one(fn, iters: int = 3) -> float:
+    best = float("inf")
+    for i in range(iters):
+        t0 = time.perf_counter()
+        fn(jax.random.key(i)).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _strength(fn, seeds: int) -> float:
+    opt = optimal_root_action(DOM)
+    hits = sum(int(np.argmax(np.asarray(fn(jax.random.key(s))))) == opt
+               for s in range(seeds))
+    return hits / seeds
+
+
+def run(report, smoke: bool = False):
+    seeds = 24 if smoke else 32
+    for lanes in ((8,) if smoke else (4, 8)):
+        lock = _searcher(_cfg("lockstep", "loss", lanes, BUDGET))
+        t_lock = _time_one(lock)
+        t_scan = _time_one(_searcher(_cfg("scan", "loss", lanes, BUDGET)))
+        # scan's equal-wall-clock budget: what it completes in t_lock
+        sb = int(round(BUDGET * t_lock / max(t_scan, 1e-9)))
+        sb = max(BUDGET // 2, min(2 * BUDGET, sb))
+        scan_eq = _searcher(_cfg("scan", "loss", lanes, sb))
+        wu = _searcher(_cfg("lockstep", "wu", lanes, BUDGET))
+        for name, fn, b, t in (("scan", scan_eq, sb, _time_one(scan_eq)),
+                               ("vloss_lockstep", lock, BUDGET, t_lock),
+                               ("wu_lockstep", wu, BUDGET, _time_one(wu))):
+            s = _strength(fn, seeds)
+            report(f"strength_{name}_lanes{lanes}", t * 1e6,
+                   f"strength={s:.3f} budget={b} seeds={seeds}")

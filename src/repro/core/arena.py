@@ -8,7 +8,11 @@ the planes a typed, documented layout:
 
     visits    [N] i32     visit count n_j
     value     [N] f32     reward sum  w_j
-    vloss     [N] i32     virtual-loss counters (in-flight trajectories)
+    vloss     [N] i32     virtual-loss counters (in-flight trajectories,
+                          ``vl_mode="loss"``)
+    unobs     [N] i32     WU-UCT unobserved-sample counters O_j — playouts
+                          initiated but not yet backed up through the node
+                          (``vl_mode="wu"``; DESIGN.md §15)
     parent    [N] i32     parent index (-1 for root / unallocated / freed)
     action    [N] i32     action taken from parent
     children  [N, A] i32  child indices (UNEXPANDED = -1)
@@ -56,8 +60,9 @@ import jax.numpy as jnp
 UNEXPANDED = -1
 ROOT = 0
 
-_FIELDS = ("visits", "value", "vloss", "parent", "action", "children",
-           "prior", "terminal", "state", "next_free", "free_list", "free_top")
+_FIELDS = ("visits", "value", "vloss", "unobs", "parent", "action",
+           "children", "prior", "terminal", "state", "next_free",
+           "free_list", "free_top")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +72,7 @@ class TreeArena:
     visits: Any
     value: Any
     vloss: Any
+    unobs: Any
     parent: Any
     action: Any
     children: Any
@@ -118,6 +124,7 @@ def init_arena(root_state, num_actions: int, max_nodes: int,
         visits=jnp.zeros((max_nodes,), jnp.int32),
         value=jnp.zeros((max_nodes,), jnp.float32),
         vloss=jnp.zeros((max_nodes,), jnp.int32),
+        unobs=jnp.zeros((max_nodes,), jnp.int32),
         parent=jnp.full((max_nodes,), UNEXPANDED, jnp.int32),
         action=jnp.full((max_nodes,), UNEXPANDED, jnp.int32),
         children=jnp.full((max_nodes, a), UNEXPANDED, jnp.int32),
@@ -193,6 +200,7 @@ def release(arena: TreeArena, rows, mask=True):
         visits=arena.visits.at[widx].set(zeros_k, mode="drop"),
         value=arena.value.at[widx].set(jnp.zeros((k,)), mode="drop"),
         vloss=arena.vloss.at[widx].set(zeros_k, mode="drop"),
+        unobs=arena.unobs.at[widx].set(zeros_k, mode="drop"),
         parent=arena.parent.at[widx].set(zeros_k + UNEXPANDED, mode="drop"),
         action=arena.action.at[widx].set(zeros_k + UNEXPANDED, mode="drop"),
         children=arena.children.at[widx].set(
@@ -246,6 +254,7 @@ def compact(arena: TreeArena, keep, new_root=ROOT) -> TreeArena:
         visits=gather(arena.visits, 0),
         value=gather(arena.value, 0.0),
         vloss=gather(arena.vloss, 0),
+        unobs=gather(arena.unobs, 0),
         parent=pr,
         action=gather(arena.action, UNEXPANDED).at[ROOT].set(UNEXPANDED),
         children=ch,

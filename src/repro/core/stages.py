@@ -17,6 +17,13 @@ Kernel/selection knobs (DESIGN.md §11/§14) — one consolidated pair on
   accelerated paths ("auto" resolves to "pallas" on TPU, "ref" elsewhere).
   The old boolean ``use_pallas`` is accepted and forwarded under a
   ``DeprecationWarning``.
+* ``vl_mode`` — in-flight decorrelation statistics (DESIGN.md §15):
+    - "loss" — classic virtual loss: one ``vloss`` plane, added to N and
+      subtracted (×``vl_weight``) from W, so Q is pessimistically corrupted
+      while playouts are in flight (the historical default);
+    - "wu"   — WU-UCT (arXiv 1810.11755): a separate ``unobs`` plane O that
+      widens only the exploration term; Q = W/max(N,1) from completed
+      statistics only.  The non-active plane stays all-zeros.
 * ``wave_select`` — Select-stage iteration order:
     - "scan"     — lane-major: lane i+1 descends after lane i, seeing its
       virtual loss at every level (the original serial Select stage);
@@ -54,6 +61,9 @@ class SearchParams:
     vl_weight: float = 1.0
     max_depth: int = 32
     puct: bool = False
+    # In-flight decorrelation statistics: "loss" (virtual loss, default —
+    # unchanged behaviour) or "wu" (WU-UCT unobserved counts, DESIGN §15).
+    vl_mode: str = "loss"
     # Which implementation backs the accelerated paths ("auto" -> "pallas"
     # on TPU, "ref" elsewhere).  One knob for the per-level UCT kernel and
     # the fused search-wave megakernel alike.
@@ -65,6 +75,9 @@ class SearchParams:
     use_pallas: Optional[bool] = None
 
     def __post_init__(self):
+        if self.vl_mode not in uct.VL_MODES:
+            raise ValueError(
+                f"vl_mode must be one of {uct.VL_MODES}, got {self.vl_mode!r}")
         if self.use_pallas is not None:
             warnings.warn(
                 "SearchParams.use_pallas is deprecated; use "
@@ -74,6 +87,10 @@ class SearchParams:
             if self.kernels == "auto":
                 object.__setattr__(
                     self, "kernels", "pallas" if self.use_pallas else "ref")
+
+    @property
+    def wu(self) -> bool:
+        return self.vl_mode == "wu"
 
     @property
     def path_len(self) -> int:
@@ -137,35 +154,50 @@ def empty_playout(sp: SearchParams, lanes: int, num_actions: int):
     }
 
 
+def infl_plane(tree: Tree, sp: SearchParams):
+    """The mode's in-flight counter plane: ``unobs`` ("wu") / ``vloss``
+    ("loss").  Static selection — the other plane stays all-zeros."""
+    return tree.unobs if sp.wu else tree.vloss
+
+
+def with_infl(tree: Tree, sp: SearchParams, plane) -> Tree:
+    """Write ``plane`` back to the mode's in-flight field."""
+    return tree.replace(unobs=plane) if sp.wu else tree.replace(vloss=plane)
+
+
 # ---------------------------------------------------------------------------
-# SELECT — UCT descent with virtual loss (serial stage)
+# SELECT — UCT descent with in-flight decorrelation (serial stage)
 # ---------------------------------------------------------------------------
 def select_one(tree: Tree, sp: SearchParams, valid):
-    """Descend from the root; returns (tree+vl, trajectory dict of scalars)."""
+    """Descend from the root; returns (tree+in-flight, trajectory dict)."""
     def cond(c):
         node, depth, _ = c
         fully = (tree.children[node] >= 0).all()
         return fully & ~tree.terminal[node] & (depth < sp.max_depth)
+
+    infl = infl_plane(tree, sp)
 
     def body(c):
         node, depth, path = c
         ch = tree.children[node]
         idx = jnp.maximum(ch, 0)
         a = uct.uct_argmax(
-            tree.visits[idx], tree.value[idx], tree.vloss[idx],
-            tree.visits[node] + tree.vloss[node], sp.cp,
+            tree.visits[idx], tree.value[idx], infl[idx],
+            tree.visits[node] + infl[node], sp.cp,
             vl_weight=sp.vl_weight, prior=tree.prior[node],
-            puct=sp.puct, valid=ch >= 0, use_pallas=sp.pallas_enabled)
+            puct=sp.puct, valid=ch >= 0, use_pallas=sp.pallas_enabled,
+            child_o=infl[idx], vl_mode=sp.vl_mode)
         nxt = ch[a]
         path = path.at[depth + 1].set(nxt)
         return nxt, depth + 1, path
 
     path0 = jnp.full((sp.path_len,), UNEXPANDED, jnp.int32).at[0].set(ROOT)
     leaf, depth, path = jax.lax.while_loop(cond, body, (jnp.int32(ROOT), jnp.int32(0), path0))
-    dup = (tree.vloss[leaf] > 0) & valid
+    dup = (infl[leaf] > 0) & valid
     mask = (path >= 0) & valid
-    tree = tree.replace(
-        vloss=tree.vloss.at[jnp.maximum(path, 0)].add(mask.astype(jnp.int32)))
+    tree = with_infl(
+        tree, sp,
+        infl.at[jnp.maximum(path, 0)].add(mask.astype(jnp.int32)))
     sel = {"path": jnp.where(valid, path, UNEXPANDED), "leaf": leaf,
            "depth": depth, "valid": valid, "dup": dup}
     return tree, sel
@@ -189,25 +221,26 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
     ``r = lanes`` under Pallas kernels, instead of ``lanes`` single-row
     calls per level.
 
-    Virtual loss is applied per level: every selected child gets +1 before
-    the next level's scores are computed, so deeper levels see the whole
-    wave's in-flight counts (tree-parallel decorrelation, WU-UCT style),
-    while lanes at the SAME level pick independently.  A lane's own VL on
-    its current node is excluded from ``parent_n``, which makes the descent
-    bit-for-bit identical to ``select_wave_scan`` at ``lanes == 1``.
+    The in-flight count (``vloss`` in "loss" mode, ``unobs`` in "wu" mode)
+    is applied per level: every selected child gets +1 before the next
+    level's scores are computed, so deeper levels see the whole wave's
+    in-flight counts (tree-parallel decorrelation), while lanes at the SAME
+    level pick independently.  A lane's own count on its current node is
+    excluded from ``parent_n``, which makes the descent bit-for-bit
+    identical to ``select_wave_scan`` at ``lanes == 1``.
     Finished/invalid lanes mask out via the argmax's ``valid`` lanes.
     """
     valid = jnp.broadcast_to(jnp.asarray(valid, bool), (lanes,))
     nmax = max_nodes(tree)
     rows = jnp.arange(lanes)
-    vloss_pre = tree.vloss            # in-flight counts before this wave
+    infl_pre = infl_plane(tree, sp)   # in-flight counts before this wave
 
     def lane_active(node, depth):
         fully = (tree.children[node] >= 0).all(axis=-1)
         return fully & ~tree.terminal[node] & (depth < sp.max_depth)
 
-    # root VL up front: the root is on every valid lane's path
-    vloss0 = tree.vloss.at[ROOT].add(valid.sum().astype(jnp.int32))
+    # root in-flight count up front: the root is on every valid lane's path
+    infl0 = infl_pre.at[ROOT].add(valid.sum().astype(jnp.int32))
     node0 = jnp.full((lanes,), ROOT, jnp.int32)
     depth0 = jnp.zeros((lanes,), jnp.int32)
     path0 = jnp.full((lanes, sp.path_len), UNEXPANDED, jnp.int32) \
@@ -218,34 +251,35 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
         return c[4].any()
 
     def body(c):
-        vloss, node, depth, path, active = c
+        infl, node, depth, path, active = c
         ch = tree.children[node]                           # [lanes, A]
         idx = jnp.maximum(ch, 0)
-        own = active.astype(jnp.int32)                     # own in-flight VL
-        pn = tree.visits[node] + vloss[node] - own
+        own = active.astype(jnp.int32)         # own in-flight count
+        pn = tree.visits[node] + infl[node] - own
         a = uct.uct_argmax(
-            tree.visits[idx], tree.value[idx], vloss[idx],
+            tree.visits[idx], tree.value[idx], infl[idx],
             pn, sp.cp, vl_weight=sp.vl_weight, prior=tree.prior[node],
             puct=sp.puct, valid=(ch >= 0) & active[:, None],
-            use_pallas=sp.pallas_enabled)
+            use_pallas=sp.pallas_enabled,
+            child_o=infl[idx], vl_mode=sp.vl_mode)
         nxt = ch[rows, a]
         col = jnp.where(active, depth + 1, sp.path_len)    # OOB -> dropped
         path = path.at[rows, col].set(nxt, mode="drop")
-        vloss = vloss.at[jnp.where(active, nxt, nmax)].add(1, mode="drop")
+        infl = infl.at[jnp.where(active, nxt, nmax)].add(1, mode="drop")
         node = jnp.where(active, nxt, node)
         depth = depth + own
         active = active & lane_active(node, depth)
-        return vloss, node, depth, path, active
+        return infl, node, depth, path, active
 
-    vloss, leaf, depth, path, _ = jax.lax.while_loop(
-        cond, body, (vloss0, node0, depth0, path0, active0))
-    tree = tree.replace(vloss=vloss)
+    infl, leaf, depth, path, _ = jax.lax.while_loop(
+        cond, body, (infl0, node0, depth0, path0, active0))
+    tree = with_infl(tree, sp, infl)
     # same meaning as the scan path's dup: the lane's leaf was already
     # in-flight when it arrived — from an earlier unfinished wave, or from a
     # lower-numbered lane of this wave (lockstep lanes at a shared node make
     # identical picks; the Expand stage then assigns them distinct siblings)
     shared = jnp.tril(leaf[:, None] == leaf[None, :], k=-1).any(axis=1)
-    dup = ((vloss_pre[leaf] > 0) | shared) & valid
+    dup = ((infl_pre[leaf] > 0) | shared) & valid
     sel = {"path": jnp.where(valid[:, None], path, UNEXPANDED),
            "leaf": leaf, "depth": depth, "valid": valid, "dup": dup}
     return tree, sel
@@ -279,14 +313,15 @@ def expand_one(tree: Tree, domain, sp: SearchParams, sel):
     state = jax.tree_util.tree_map(
         lambda buf, s: buf.at[new].set(s, mode="drop"),
         tree.state, child_state)
+    infl_upd = {("unobs" if sp.wu else "vloss"):
+                infl_plane(tree, sp).at[new].add(1, mode="drop")}
     tree = tree.replace(
         children=tree.children.at[
             jnp.where(can, leaf, nmax), a].set(new, mode="drop"),
         parent=tree.parent.at[new].set(leaf, mode="drop"),
         action=tree.action.at[new].set(a, mode="drop"),
         terminal=tree.terminal.at[new].set(term, mode="drop"),
-        vloss=tree.vloss.at[new].add(1, mode="drop"),
-        state=state)
+        state=state, **infl_upd)
 
     node = jnp.where(can, new, leaf)
     path = sel["path"].at[depth + 1].set(jnp.where(can, new, UNEXPANDED))
@@ -328,7 +363,9 @@ def playout_wave(domain, sp: SearchParams, exp, rng):
 # ---------------------------------------------------------------------------
 # BACKUP — scatter-add along paths (commutative => order-independent)
 # ---------------------------------------------------------------------------
-def backup_wave(tree: Tree, po):
+def backup_wave(tree: Tree, po, sp: Optional[SearchParams] = None):
+    """Scatter-add N/W along paths and drain the mode's in-flight plane.
+    ``sp=None`` keeps the historical signature and means "loss" mode."""
     paths = po["path"]                                     # [L, P]
     valid = po["valid"]
     mask = (paths >= 0) & valid[:, None]
@@ -337,11 +374,13 @@ def backup_wave(tree: Tree, po):
     vals = jnp.broadcast_to(po["value"][:, None], paths.shape).reshape(-1)
     # write priors for freshly created nodes
     widx = jnp.where(po["is_new"] & valid, po["node"], max_nodes(tree))
+    wu = sp is not None and sp.wu
+    infl = (tree.unobs if wu else tree.vloss).at[idx].add(-m.astype(jnp.int32))
     return tree.replace(
         visits=tree.visits.at[idx].add(m.astype(jnp.int32)),
         value=tree.value.at[idx].add(jnp.where(m, vals, 0.0)),
-        vloss=tree.vloss.at[idx].add(-m.astype(jnp.int32)),
-        prior=tree.prior.at[widx].set(po["priors"], mode="drop"))
+        prior=tree.prior.at[widx].set(po["priors"], mode="drop"),
+        **{("unobs" if wu else "vloss"): infl})
 
 
 # ---------------------------------------------------------------------------

@@ -156,6 +156,7 @@ def check_consistency(tree: Tree) -> Dict[str, Any]:
     idx = jnp.arange(n)
     alive = live_mask(tree)
     ok_vloss = (tree.vloss == 0).all()
+    ok_unobs = (tree.unobs == 0).all()
     ch = tree.children[ROOT]
     child_sum = jnp.where(ch >= 0, tree.visits[jnp.maximum(ch, 0)], 0).sum()
     ok_flow = child_sum <= tree.visits[ROOT]
@@ -165,5 +166,6 @@ def check_consistency(tree: Tree) -> Dict[str, Any]:
         nonroot,
         (p >= 0) & (p < n) & alive[jnp.clip(p, 0, n - 1)],
         True).all()
-    return {"vloss_drained": ok_vloss, "visit_flow": ok_flow,
-            "parents_valid": ok_parent, "nodes": alive.sum()}
+    return {"vloss_drained": ok_vloss, "unobs_drained": ok_unobs,
+            "visit_flow": ok_flow, "parents_valid": ok_parent,
+            "nodes": alive.sum()}

@@ -2,9 +2,26 @@
 
 Paper eq. (1):  UCT_j = w_j / n_j + C_p * sqrt(ln(n) / n_j)
 
-Virtual loss (in-flight decorrelation, §IV related work / DESIGN §2):
+Two in-flight decorrelation modes (``vl_mode``, DESIGN.md §15):
+
+``"loss"`` — classic virtual loss (§IV related work / DESIGN §2):
     n_j^eff = n_j + vl_j
     w_j^eff = w_j - vl_weight * vl_j     (pessimistic in-flight estimate)
+Q is *corrupted* while playouts are in flight — the price of the simple
+single-plane bookkeeping.
+
+``"wu"`` — WU-UCT (arXiv 1810.11755): track initiated-but-incomplete
+playouts as an unobserved-sample count O_j that widens only exploration:
+    Q_j       = w_j / max(n_j, 1)                      (completed stats only)
+    explore_j = sqrt(ln(n_p + O_p) / max(n_j + O_j, 1))
+Q is bit-identical whether 0 or 1000 playouts are in flight through j.
+
+Must-explore ordering (intended, both modes, ref == Pallas bit-for-bit):
+an *idle* unvisited child (effective count < 0.5 — loss: N+vl, wu: N+O)
+gets the ``1e30`` sentinel and always wins; an *in-flight* unvisited child
+scores finitely (loss: ``-vl_weight + cp*explore``; wu: ``0 + cp*explore``)
+so lanes spread over idle siblings first.  Sentinel ties resolve to the
+lowest index — both the jnp path and the kernel use first-max ``argmax``.
 """
 from __future__ import annotations
 
@@ -13,14 +30,31 @@ import jax.numpy as jnp
 
 NEG_INF = jnp.float32(-1e30)
 
+VL_MODES = ("loss", "wu")
+
 
 def uct_scores(child_n, child_w, child_vl, parent_n, cp, *, vl_weight=1.0,
-               prior=None, puct=False):
-    """All inputs per-child [..., A]; parent_n broadcastable. fp32 scores."""
-    n_eff = (child_n + child_vl).astype(jnp.float32)
-    w_eff = child_w - vl_weight * child_vl.astype(jnp.float32)
+               prior=None, puct=False, child_o=None, vl_mode="loss"):
+    """All inputs per-child [..., A]; parent_n broadcastable. fp32 scores.
+
+    ``vl_mode="loss"`` reads ``child_vl`` and ignores ``child_o``;
+    ``"wu"`` reads ``child_o`` and ignores ``child_vl``.  ``parent_n`` must
+    already include the same mode's in-flight count (N_p + vl_p or N_p + O_p
+    — callers own that sum so lockstep can exclude a lane's own count).
+    """
+    if vl_mode not in VL_MODES:
+        raise ValueError(f"vl_mode must be one of {VL_MODES}, got {vl_mode!r}")
+    n = child_n.astype(jnp.float32)
     pn = jnp.maximum(parent_n.astype(jnp.float32), 1.0)
-    q = w_eff / jnp.maximum(n_eff, 1.0)
+    if vl_mode == "wu":
+        o = jnp.zeros_like(n) if child_o is None \
+            else child_o.astype(jnp.float32)
+        n_eff = n + o                       # widens exploration only
+        q = child_w / jnp.maximum(n, 1.0)   # completed statistics only
+    else:
+        vl = child_vl.astype(jnp.float32)
+        n_eff = n + vl
+        q = (child_w - vl_weight * vl) / jnp.maximum(n_eff, 1.0)
     if puct:
         assert prior is not None
         explore = prior * jnp.sqrt(pn)[..., None] / (1.0 + n_eff)
@@ -33,15 +67,17 @@ def uct_scores(child_n, child_w, child_vl, parent_n, cp, *, vl_weight=1.0,
 
 def uct_argmax(child_n, child_w, child_vl, parent_n, cp, *, vl_weight=1.0,
                prior=None, puct=False, valid=None, use_pallas=False,
-               interpret=False):
+               interpret=False, child_o=None, vl_mode="loss"):
     """Best child index along the last axis. ``valid`` masks illegal slots."""
     if use_pallas and not puct:
         from repro.kernels.uct_select import ops as uops
         return uops.uct_argmax(child_n, child_w, child_vl, parent_n,
                                cp=cp, vl_weight=vl_weight,
-                               valid=valid, interpret=interpret)
+                               valid=valid, interpret=interpret,
+                               child_o=child_o, vl_mode=vl_mode)
     s = uct_scores(child_n, child_w, child_vl, parent_n, cp,
-                   vl_weight=vl_weight, prior=prior, puct=puct)
+                   vl_weight=vl_weight, prior=prior, puct=puct,
+                   child_o=child_o, vl_mode=vl_mode)
     if valid is not None:
         s = jnp.where(valid, s, NEG_INF)
     return jnp.argmax(s, axis=-1).astype(jnp.int32)

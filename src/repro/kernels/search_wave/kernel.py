@@ -49,7 +49,16 @@ _HI = jax.lax.Precision.HIGHEST
 
 @dataclasses.dataclass(frozen=True)
 class WaveCfg:
-    """Static shape/knob bundle threaded through the phase helpers."""
+    """Static shape/knob bundle threaded through the phase helpers.
+
+    ``wu`` selects the in-flight statistics mode (DESIGN.md §15).  The
+    launch carries ONE in-flight plane operand (the ``vloss``-named slot):
+    ops.py stages ``tree.vloss`` there in "loss" mode and ``tree.unobs``
+    (the WU-UCT O counts) in "wu" mode — increments fused into the descent
+    /expand, decrements fused into backup, input/output-aliased either way.
+    Only the scoring formula branches on ``wu``; the inactive plane is
+    all-zeros and never enters the kernel.
+    """
     n: int            # max_nodes
     a: int            # num_actions
     lanes: int
@@ -58,6 +67,7 @@ class WaveCfg:
     cp: float
     vl_weight: float
     puct: bool
+    wu: bool = False
 
 
 def _iota(rows: int, cols: int, dim: int):
@@ -188,11 +198,15 @@ def _select_phase(cfg: WaveCfg, vloss_ref, visits_v, value_v, prior_v,
         cvl = _gather_vec(vloss_v, idx.reshape(-1)).reshape(l, a)
         pn = (_gather_vec(visits_v, node) + _gather_vec(vloss_v, node)
               - own.astype(jnp.float32))
-        # uct_scores, formula-for-formula (core.uct)
+        # uct_scores, formula-for-formula (core.uct); in "wu" mode cvl holds
+        # the gathered O counts — they widen exploration only, Q is computed
+        # from completed statistics alone
         n_eff = cn + cvl
-        w_eff = cw - cfg.vl_weight * cvl
         pnc = jnp.maximum(pn, 1.0)
-        q = w_eff / jnp.maximum(n_eff, 1.0)
+        if cfg.wu:
+            q = cw / jnp.maximum(cn, 1.0)
+        else:
+            q = (cw - cfg.vl_weight * cvl) / jnp.maximum(n_eff, 1.0)
         if cfg.puct:
             pr = _gather_rows(prior_v, node)
             explore = pr * jnp.sqrt(pnc)[:, None] / (1.0 + n_eff)

@@ -7,8 +7,10 @@ Pallas kernels on CPU via the interpreter).
 
 This module owns the arena <-> kernel-plane packing:
 
-* 1-D arena planes (visits/value/vloss/terminal/free_list) ride as
-  ``[N, 1]`` VMEM blocks; 2-D planes (children/prior) as ``[N, A]``;
+* 1-D arena planes (visits/value/in-flight/terminal/free_list) ride as
+  ``[N, 1]`` VMEM blocks; 2-D planes (children/prior) as ``[N, A]``.  The
+  in-flight slot carries ``tree.vloss`` ("loss" mode) or ``tree.unobs``
+  ("wu" mode, WU-UCT O counts) — see ``kernel.WaveCfg``;
 * ``next_free`` / ``free_top`` / wave validity ride in one ``[1, 4]``
   scalar word;
 * the kernel mutates visits/value/vloss/prior/children in place
@@ -30,10 +32,15 @@ def _cfg(tree: TreeArena, sp, lanes: int) -> K.WaveCfg:
     return K.WaveCfg(n=tree.max_nodes, a=tree.num_actions, lanes=lanes,
                      path_len=sp.path_len, max_depth=sp.max_depth,
                      cp=float(sp.cp), vl_weight=float(sp.vl_weight),
-                     puct=bool(sp.puct))
+                     puct=bool(sp.puct), wu=bool(getattr(sp, "wu", False)))
 
 
-def _planes(tree: TreeArena, wave_valid):
+def _infl_field(sp) -> str:
+    """The arena field backing the kernel's in-flight plane slot."""
+    return "unobs" if getattr(sp, "wu", False) else "vloss"
+
+
+def _planes(tree: TreeArena, sp, wave_valid):
     col = lambda x, dt: x.astype(dt).reshape(-1, 1)
     scal = jnp.stack([tree.next_free.astype(jnp.int32),
                       tree.free_top.astype(jnp.int32),
@@ -42,7 +49,9 @@ def _planes(tree: TreeArena, wave_valid):
     return {
         "visits": col(tree.visits, jnp.int32),
         "value": col(tree.value, jnp.float32),
-        "vloss": col(tree.vloss, jnp.int32),
+        # the mode's in-flight counter plane (WaveCfg.wu docstring): vloss
+        # in "loss" mode, the WU-UCT unobs counts in "wu" mode
+        "infl": col(getattr(tree, _infl_field(sp)), jnp.int32),
         "prior": tree.prior.astype(jnp.float32),
         "children": tree.children.astype(jnp.int32),
         "terminal": col(tree.terminal, jnp.int32),
@@ -111,24 +120,25 @@ def tree_round(tree: TreeArena, domain, sp, lanes: int, valid, rng, *,
     from repro.core import stages as S
     cfg = _cfg(tree, sp, lanes)
     wv = jnp.asarray(valid, bool).all()       # kernel waves are all-or-none
-    p = _planes(tree, wv)
-    (vloss, children, s_leaf, s_depth, s_path, s_dup,
+    p = _planes(tree, sp, wv)
+    (infl, children, s_leaf, s_depth, s_path, s_dup,
      e_can, e_slot, e_new) = K.se_call(
-        cfg, p["vloss"], p["children"], p["visits"], p["value"], p["prior"],
+        cfg, p["infl"], p["children"], p["visits"], p["value"], p["prior"],
         p["terminal"], p["free_list"], p["scal"], interpret=interpret)
     valid_vec = jnp.broadcast_to(wv, (lanes,))
     sel = _unpack_sel(s_leaf, s_depth, s_path, s_dup, valid_vec)
-    tree = tree.replace(vloss=vloss[:, 0], children=children)
+    tree = tree.replace(children=children,
+                        **{_infl_field(sp): infl[:, 0]})
     tree, es = _apply_es(tree, sel["path"], sel["depth"], sel["leaf"],
                          e_can, e_slot, e_new, valid_vec)
     tree, exp = ref.finish_expand(tree, domain, es)
     po = S.playout_wave(domain, sp, exp, rng)
-    p2 = _planes(tree, wv)
-    visits, value, vloss, prior = K.b_call(
-        cfg, p2["visits"], p2["value"], p2["vloss"], p2["prior"],
+    p2 = _planes(tree, sp, wv)
+    visits, value, infl, prior = K.b_call(
+        cfg, p2["visits"], p2["value"], p2["infl"], p2["prior"],
         _pb(po, cfg.a), interpret=interpret)
     tree = tree.replace(visits=visits[:, 0], value=value[:, 0],
-                        vloss=vloss[:, 0], prior=prior)
+                        prior=prior, **{_infl_field(sp): infl[:, 0]})
     return tree, sel
 
 
@@ -143,16 +153,17 @@ def pipeline_tick(tree: TreeArena, domain, sp, lanes: int, wave_valid,
                                  buf_se, buf_ep, buf_pb, rng)
     from repro.core import stages as S
     cfg = _cfg(tree, sp, lanes)
-    p = _planes(tree, wave_valid)
+    p = _planes(tree, sp, wave_valid)
     se_leaf = buf_se["leaf"].astype(jnp.int32)[:, None]
     se_valid = buf_se["valid"].astype(jnp.int32)[:, None]
-    (visits, value, vloss, prior, children,
+    (visits, value, infl, prior, children,
      s_leaf, s_depth, s_path, s_dup, e_can, e_slot, e_new) = K.bes_call(
-        cfg, p["visits"], p["value"], p["vloss"], p["prior"], p["children"],
+        cfg, p["visits"], p["value"], p["infl"], p["prior"], p["children"],
         p["terminal"], p["free_list"], p["scal"], se_leaf, se_valid,
         _pb(buf_pb, cfg.a), interpret=interpret)
     tree = tree.replace(visits=visits[:, 0], value=value[:, 0],
-                        vloss=vloss[:, 0], prior=prior, children=children)
+                        prior=prior, children=children,
+                        **{_infl_field(sp): infl[:, 0]})
     tree, es = _apply_es(tree, buf_se["path"], buf_se["depth"],
                          buf_se["leaf"], e_can, e_slot, e_new,
                          buf_se["valid"])

@@ -45,6 +45,7 @@ def expand_wave_struct(tree: TreeArena, sp, sel):
     ``valid``.  State/terminal of the new rows are NOT written here — see
     ``finish_expand``.
     """
+    from repro.core import stages as S
     leafs, depth, valid = sel["leaf"], sel["depth"], sel["valid"]
     n = tree.max_nodes
     lanes = leafs.shape[0]
@@ -81,12 +82,12 @@ def expand_wave_struct(tree: TreeArena, sp, sel):
     rows = jnp.arange(lanes)
     path = sel["path"].at[rows, depth + 1].set(
         jnp.where(can, new, UNEXPANDED))
-    tree = tree.replace(
+    infl = S.infl_plane(tree, sp).at[new_s].add(1, mode="drop")
+    tree = S.with_infl(tree, sp, infl).replace(
         children=tree.children.at[
             jnp.where(can, leafs, n), slot].set(new, mode="drop"),
         parent=tree.parent.at[new_s].set(leafs, mode="drop"),
         action=tree.action.at[new_s].set(slot, mode="drop"),
-        vloss=tree.vloss.at[new_s].add(1, mode="drop"),
         next_free=nf0 + (r_total - pops),
         free_top=ft0 - pops)
     es = {"leaf": leafs, "slot": slot, "new": new_s, "can": can,
@@ -126,7 +127,7 @@ def tree_round(tree: TreeArena, domain, sp, lanes: int, valid, rng):
     tree, es = expand_wave_struct(tree, sp, sel)
     tree, exp = finish_expand(tree, domain, es)
     po = S.playout_wave(domain, sp, exp, rng)
-    tree = S.backup_wave(tree, po)
+    tree = S.backup_wave(tree, po, sp)
     return tree, sel
 
 
@@ -137,7 +138,7 @@ def pipeline_tick(tree: TreeArena, domain, sp, lanes: int, wave_valid,
     unfused tick, with Expand's per-lane scan replaced by the vectorized
     structural pass."""
     from repro.core import stages as S
-    tree = S.backup_wave(tree, buf_pb)
+    tree = S.backup_wave(tree, buf_pb, sp)
     new_pb = S.playout_wave(domain, sp, buf_ep, rng)
     tree, es = expand_wave_struct(tree, sp, buf_se)
     tree, new_ep = finish_expand(tree, domain, es)

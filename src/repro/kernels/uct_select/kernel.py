@@ -25,39 +25,45 @@ from repro.parallel.compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _uct_kernel(n_ref, w_ref, vl_ref, pn_ref, valid_ref, o_ref, *,
-                cp: float, vl_weight: float):
+def _uct_kernel(n_ref, w_ref, vl_ref, uo_ref, pn_ref, valid_ref, out_ref, *,
+                cp: float, vl_weight: float, wu: bool):
     n = n_ref[...].astype(jnp.float32)           # [BLK_R, A]
     w = w_ref[...]
     vl = vl_ref[...].astype(jnp.float32)
+    uo = uo_ref[...].astype(jnp.float32)         # [BLK_R, A] unobs counts O
     pn = pn_ref[...].astype(jnp.float32)         # [BLK_R, 1]
     valid = valid_ref[...]                       # [BLK_R, A] int32 mask
-    n_eff = n + vl
-    w_eff = w - vl_weight * vl
-    q = w_eff / jnp.maximum(n_eff, 1.0)
+    if wu:
+        # WU-UCT: O widens exploration only; Q from completed stats.
+        n_eff = n + uo
+        q = w / jnp.maximum(n, 1.0)
+    else:
+        n_eff = n + vl
+        q = (w - vl_weight * vl) / jnp.maximum(n_eff, 1.0)
     explore = jnp.sqrt(jnp.log(jnp.maximum(pn, 1.0)) / jnp.maximum(n_eff, 1.0))
     s = q + cp * explore
-    s = jnp.where(n_eff < 0.5, 1e30, s)          # unvisited -> must explore
+    s = jnp.where(n_eff < 0.5, 1e30, s)          # idle unvisited -> must explore
     s = jnp.where(valid > 0, s, NEG_INF)
-    o_ref[...] = jnp.argmax(s, axis=1, keepdims=True).astype(jnp.int32)
+    # first-max argmax: sentinel ties resolve to the lowest index (ref parity)
+    out_ref[...] = jnp.argmax(s, axis=1, keepdims=True).astype(jnp.int32)
 
 
-def uct_argmax_tiles(child_n, child_w, child_vl, parent_n, valid, *,
-                     cp: float, vl_weight: float, blk_r: int = 256,
-                     interpret: bool = False):
+def uct_argmax_tiles(child_n, child_w, child_vl, child_o, parent_n, valid, *,
+                     cp: float, vl_weight: float, wu: bool = False,
+                     blk_r: int = 256, interpret: bool = False):
     """All [R, A] (A lane-padded); parent_n [R, 1] -> best index [R, 1] i32."""
     r, a = child_n.shape
     nr = pl.cdiv(r, blk_r)
-    kernel = functools.partial(_uct_kernel, cp=cp, vl_weight=vl_weight)
+    kernel = functools.partial(_uct_kernel, cp=cp, vl_weight=vl_weight, wu=wu)
     row = lambda i: (i, 0)
     return pl.pallas_call(
         kernel,
         grid=(nr,),
-        in_specs=[pl.BlockSpec((blk_r, a), row) for _ in range(3)]
+        in_specs=[pl.BlockSpec((blk_r, a), row) for _ in range(4)]
         + [pl.BlockSpec((blk_r, 1), row), pl.BlockSpec((blk_r, a), row)],
         out_specs=pl.BlockSpec((blk_r, 1), row),
         out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
         compiler_params=tpu_compiler_params(
             dimension_semantics=(pltpu.PARALLEL,)),
         interpret=interpret,
-    )(child_n, child_w, child_vl, parent_n, valid)
+    )(child_n, child_w, child_vl, child_o, parent_n, valid)

@@ -20,35 +20,41 @@ from repro.kernels.uct_select import ref as R
 
 def uct_argmax(child_n, child_w, child_vl, parent_n, *, vl_weight=1.0,
                valid=None, interpret: bool = False, use_ref: bool = False,
-               cp=None):
+               cp=None, child_o=None, vl_mode: str = "loss"):
     if cp is None:
         raise TypeError("cp is required")
     batch_shape = child_n.shape[:-1]
     a = child_n.shape[-1]
     if valid is None:
         valid = jnp.ones(child_n.shape, bool)
+    if child_o is None:
+        child_o = jnp.zeros(child_n.shape, jnp.int32)
     if use_ref:
         return R.uct_argmax_ref(child_n, child_w, child_vl, parent_n, valid,
-                                cp=float(cp), vl_weight=vl_weight)
+                                cp=float(cp), vl_weight=vl_weight,
+                                child_o=child_o, vl_mode=vl_mode)
     r = int(np.prod(batch_shape)) if batch_shape else 1
     pad_a = (-a) % 128
     n2 = child_n.reshape(r, a).astype(jnp.float32)
     w2 = child_w.reshape(r, a).astype(jnp.float32)
     v2 = child_vl.reshape(r, a).astype(jnp.float32)
+    o2 = child_o.reshape(r, a).astype(jnp.float32)
     pn = jnp.reshape(parent_n, (r, 1)).astype(jnp.float32) if jnp.ndim(parent_n) \
         else jnp.full((r, 1), parent_n, jnp.float32)
     va = valid.reshape(r, a).astype(jnp.int32)
     if pad_a:
         z = lambda x, fill: jnp.pad(x, ((0, 0), (0, pad_a)), constant_values=fill)
-        n2, w2, v2, va = z(n2, 1), z(w2, 0), z(v2, 0), z(va, 0)
+        n2, w2, v2, o2, va = z(n2, 1), z(w2, 0), z(v2, 0), z(o2, 0), z(va, 0)
     blk_r = min(256, max(8, r + (-r) % 8))     # sublane-aligned row tile
     pad_r = (-r) % blk_r
     if pad_r:
         zr = lambda x: jnp.pad(x, ((0, pad_r), (0, 0)), constant_values=1)
-        n2, w2, v2, pn, va = zr(n2), zr(w2), zr(v2), zr(pn), jnp.pad(
-            va, ((0, pad_r), (0, 0)), constant_values=0).at[r:, 0].set(1)
-    out = K.uct_argmax_tiles(n2, w2, v2, pn, va, cp=float(cp),
-                             vl_weight=float(vl_weight), blk_r=blk_r,
+        n2, w2, v2, o2, pn = zr(n2), zr(w2), zr(v2), zr(o2), zr(pn)
+        va = jnp.pad(va, ((0, pad_r), (0, 0)),
+                     constant_values=0).at[r:, 0].set(1)
+    out = K.uct_argmax_tiles(n2, w2, v2, o2, pn, va, cp=float(cp),
+                             vl_weight=float(vl_weight),
+                             wu=(vl_mode == "wu"), blk_r=blk_r,
                              interpret=interpret)
     out = out[:r, 0]
     return out.reshape(batch_shape) if batch_shape else out[0]

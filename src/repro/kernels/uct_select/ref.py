@@ -2,6 +2,8 @@
 
 Shares the kernel's wave contract: rows are independent (lanes), duplicated
 parents are fine, and an all-invalid row returns index 0 (argmax over -inf).
+Sentinel ties (several idle unvisited children all at 1e30) resolve to the
+lowest index — first-max argmax, same as the kernel.
 """
 from __future__ import annotations
 
@@ -11,8 +13,9 @@ from repro.core import uct
 
 
 def uct_argmax_ref(child_n, child_w, child_vl, parent_n, valid, *,
-                   cp: float, vl_weight: float):
+                   cp: float, vl_weight: float, child_o=None,
+                   vl_mode: str = "loss"):
     s = uct.uct_scores(child_n, child_w, child_vl, parent_n, cp,
-                       vl_weight=vl_weight)
+                       vl_weight=vl_weight, child_o=child_o, vl_mode=vl_mode)
     s = jnp.where(valid, s, uct.NEG_INF)
     return jnp.argmax(s, axis=-1).astype(jnp.int32)

@@ -87,11 +87,14 @@ class SearchConfig:
                ``search_batch`` fan-outs).
     params:    the shared UCT/virtual-loss knobs (core.stages.SearchParams).
     kernels /
-    wave_select: top-level conveniences for the consolidated kernel pair
-               (DESIGN.md §14).  Anything other than "auto" is forwarded
-               into ``params`` at construction, so
-               ``SearchConfig(kernels="pallas")`` ==
+    wave_select /
+    vl_mode:   top-level conveniences for the consolidated kernel pair and
+               the in-flight-statistics mode (DESIGN.md §14/§15).  Anything
+               other than the default is forwarded into ``params`` at
+               construction, so ``SearchConfig(kernels="pallas")`` ==
                ``SearchConfig(params=SearchParams(kernels="pallas"))``.
+               ``vl_mode``: "loss" (virtual loss, the unchanged default) or
+               "wu" (WU-UCT unobserved counts — Q from completed stats only).
     """
 
     method: str = "sequential"
@@ -102,6 +105,7 @@ class SearchConfig:
     params: SearchParams = dataclasses.field(default_factory=SearchParams)
     kernels: str = "auto"
     wave_select: str = "auto"
+    vl_mode: str = "loss"
 
     def __post_init__(self):
         upd = {}
@@ -109,6 +113,8 @@ class SearchConfig:
             upd["kernels"] = self.kernels
         if self.wave_select != "auto" and self.params.wave_select == "auto":
             upd["wave_select"] = self.wave_select
+        if self.vl_mode != "loss" and self.params.vl_mode == "loss":
+            upd["vl_mode"] = self.vl_mode
         if upd:
             object.__setattr__(
                 self, "params", dataclasses.replace(self.params, **upd))

@@ -8,7 +8,12 @@ are now deprecated shims over these).  All share:
 * the common stats schema (api.STATS_KEYS), with ``playouts_requested`` the
   budget after lane rounding and ``playouts_completed`` the backups actually
   applied — the pipeline counts completions per tick, the others complete
-  exactly what they request;
+  exactly what they request.  ``duplicates`` means exactly one thing for
+  every strategy: the selected leaf already had in-flight playouts when the
+  lane arrived (pre-wave in-flight count > 0, or a lower-numbered lane of
+  the same wave picked the same leaf).  Single-trajectory strategies
+  (sequential / root / leaf) measure the same event — it is provably always
+  zero for them, and tests assert that;
 * ``SearchResult`` assembly via ``api.result_from_tree``.
 
 Paper mapping (§IV baselines + §V contribution):
@@ -44,7 +49,7 @@ def _ceil_div(a: int, b: int) -> int:
 
 
 def _sequential_core(domain, sp, budget: int, max_nodes: int, rng):
-    """Shared S→E→P→B loop; returns (tree, per-iteration playout values)."""
+    """Shared S→E→P→B loop; returns (tree, playout values, dup flags)."""
     tree = init_tree(domain, max_nodes or budget + 2)
 
     def it(tree, rng_t):
@@ -53,18 +58,21 @@ def _sequential_core(domain, sp, budget: int, max_nodes: int, rng):
         po = S.playout_wave(
             domain, sp,
             jax.tree_util.tree_map(lambda x: x[None], exp), rng_t)
-        tree = S.backup_wave(tree, po)
-        return tree, po["value"][0]
+        tree = S.backup_wave(tree, po, sp)
+        return tree, (po["value"][0], sel["dup"])
 
-    tree, values = jax.lax.scan(it, tree, jax.random.split(rng, budget))
-    return tree, values
+    tree, (values, dups) = jax.lax.scan(
+        it, tree, jax.random.split(rng, budget))
+    return tree, values, dups
 
 
 @register_strategy("sequential")
 def sequential(domain, cfg: SearchConfig, rng) -> SearchResult:
-    tree, values = _sequential_core(domain, cfg.params, cfg.budget,
-                                    cfg.max_nodes, rng)
-    stats = make_stats(cfg.budget, cfg.budget, 0, cfg.budget)
+    tree, values, dups = _sequential_core(domain, cfg.params, cfg.budget,
+                                          cfg.max_nodes, rng)
+    # one trajectory in flight at a time -> dups.sum() is provably 0, but
+    # report the measured event so all strategies share one definition
+    stats = make_stats(cfg.budget, cfg.budget, dups.sum(), cfg.budget)
     return result_from_tree(tree, stats, extras={"values": values})
 
 
@@ -77,14 +85,15 @@ def root(domain, cfg: SearchConfig, rng) -> SearchResult:
     per = _ceil_div(cfg.budget, workers)
 
     def one(r):
-        tree, _ = _sequential_core(domain, cfg.params, per, cfg.max_nodes, r)
+        tree, _, dups = _sequential_core(domain, cfg.params, per,
+                                         cfg.max_nodes, r)
         n, w, _ = root_child_stats(tree)    # n already 0 at invalid slots
-        return n.astype(jnp.int32), w
+        return n.astype(jnp.int32), w, dups.sum()
 
-    ns, ws = jax.vmap(one)(jax.random.split(rng, workers))
+    ns, ws, dups = jax.vmap(one)(jax.random.split(rng, workers))
     visits, value = ns.sum(0), ws.sum(0)
     best = jnp.argmax(jnp.where(visits > 0, visits, -1)).astype(jnp.int32)
-    stats = make_stats(per * workers, per * workers, 0, per)
+    stats = make_stats(per * workers, per * workers, dups.sum(), per)
     return SearchResult(action_visits=visits, action_value=value,
                         best_action=best, tree=None, stats=stats, extras={})
 
@@ -103,18 +112,20 @@ def leaf(domain, cfg: SearchConfig, rng) -> SearchResult:
         values = jax.vmap(lambda r: domain.playout(exp["state"], r))(
             jax.random.split(rng_t, workers))
         v_sum = values.sum()
-        # aggregate backup: n += workers, w += sum(values) along the path
+        # aggregate backup: n += workers, w += sum(values) along the path;
+        # drain whichever in-flight plane Select/Expand incremented
         paths = exp["path"]
         mask = paths >= 0
         idx = jnp.maximum(paths, 0)
+        infl = S.infl_plane(tree, sp).at[idx].add(-mask.astype(jnp.int32))
         tree = tree.replace(
             visits=tree.visits.at[idx].add(mask * workers),
             value=tree.value.at[idx].add(jnp.where(mask, v_sum, 0.0)),
-            vloss=tree.vloss.at[idx].add(-mask.astype(jnp.int32)))
-        return tree, None
+            **{("unobs" if sp.wu else "vloss"): infl})
+        return tree, sel["dup"]
 
-    tree, _ = jax.lax.scan(it, tree, jax.random.split(rng, iters))
-    stats = make_stats(iters * workers, iters * workers, 0, iters)
+    tree, dups = jax.lax.scan(it, tree, jax.random.split(rng, iters))
+    stats = make_stats(iters * workers, iters * workers, dups.sum(), iters)
     return result_from_tree(tree, stats)
 
 
@@ -137,7 +148,7 @@ def tree_parallel(domain, cfg: SearchConfig, rng) -> SearchResult:
         tree, sels = S.select_wave(tree, sp, threads, jnp.asarray(True))
         tree, exps = S.expand_wave(tree, domain, sp, sels)
         po = S.playout_wave(domain, sp, exps, rng_t)
-        tree = S.backup_wave(tree, po)
+        tree = S.backup_wave(tree, po, sp)
         return tree, {"dup": sels["dup"].sum()}
 
     tree, st = jax.lax.scan(round_fn, tree, jax.random.split(rng, rounds))
@@ -178,7 +189,7 @@ def pipeline(domain, cfg: SearchConfig, rng) -> SearchResult:
                 buf_se, buf_ep, buf_pb, rng_t)
         else:
             # Backup stage — wave t-3 (oldest in flight)
-            tree = S.backup_wave(tree, buf_pb)
+            tree = S.backup_wave(tree, buf_pb, sp)
             # Playout stage — wave t-2 (parallel lanes)
             new_pb = S.playout_wave(domain, sp, buf_ep, rng_t)
             # Expand stage — wave t-1

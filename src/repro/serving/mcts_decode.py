@@ -99,6 +99,10 @@ class MCTSDecodeConfig:
     # Kernel implementation for the accelerated paths ("auto" -> Pallas on
     # TPU); threaded into SearchParams.kernels (DESIGN.md §14).
     kernels: str = "auto"
+    # In-flight decorrelation statistics inside each per-token search
+    # (DESIGN.md §15): "loss" = classic virtual loss, "wu" = WU-UCT
+    # unobserved counts (Q from completed playouts only).
+    vl_mode: str = "loss"
     # Arena capacity per slot for tree_reuse (0 -> 2*budget+2: one search's
     # worth of fresh allocations on top of a carried subtree).  The carry
     # must keep one capacity across tokens, so this is fixed per engine.
@@ -131,6 +135,7 @@ class MCTSDecodeConfig:
             # the carried arena splices into the next search unchanged
             max_nodes=self.resolved_arena_nodes if self.tree_reuse else 0,
             kernels=self.kernels, wave_select=self.wave_select,
+            vl_mode=self.vl_mode,
             params=SearchParams(cp=self.cp, max_depth=self.search_depth,
                                 puct=True))
 

@@ -31,8 +31,8 @@ from repro.search import SearchConfig, SearchParams, search
 
 DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
 SP = S.SearchParams(cp=0.7, max_depth=6, kernels="ref")
-PLANES = ("visits", "value", "vloss", "children", "parent", "action",
-          "prior", "terminal", "next_free", "free_top")
+PLANES = ("visits", "value", "vloss", "unobs", "children", "parent",
+          "action", "prior", "terminal", "next_free", "free_top")
 
 
 def _arena(n=8, a=3):
@@ -295,6 +295,7 @@ def test_mega_invariants(lanes):
     res = _run("pipeline", "mega", lanes, budget=128)
     c = check_consistency(res.tree)
     assert bool(c["vloss_drained"]), c
+    assert bool(c["unobs_drained"]), c
     assert bool(c["visit_flow"]), c
     assert bool(c["parents_valid"]), c
     assert int(res.tree.visits[ROOT]) == 128

@@ -243,6 +243,85 @@ def test_uct_argmax_kernel_wave_finished_lanes():
     assert bool((z1 == 0).all()) and bool((z2 == 0).all())
 
 
+# Must-explore sentinel ordering (uct.py docstring): idle unvisited children
+# score 1e30 and win; sentinel ties resolve FIRST-MAX — the lowest valid
+# index — identically on the ref and Pallas paths, in both vl modes.
+@pytest.mark.parametrize("vl_mode", ["loss", "wu"])
+@pytest.mark.parametrize("r,a", [(8, 4), (64, 130)])
+def test_uct_argmax_multiple_unvisited_tie_lowest_index(vl_mode, r, a):
+    from repro.kernels.uct_select import ops as uo
+    ks = jax.random.split(jax.random.key(15), 3)
+    n = jax.random.randint(ks[0], (r, a), 0, 9).astype(jnp.float32)
+    # every row gets >= 2 idle unvisited children at random columns
+    cols = jax.random.permutation(
+        ks[1], jnp.broadcast_to(jnp.arange(a), (r, a)), axis=1,
+        independent=True)[:, :2]
+    rows = jnp.arange(r)[:, None]
+    n = n.at[rows, cols].set(0.0)
+    w = jax.random.normal(ks[2], (r, a))
+    zero = jnp.zeros((r, a))
+    pn = n.sum(-1) + 1
+    valid = jnp.ones((r, a), bool)
+    kw = dict(cp=1.4, valid=valid, child_o=zero, vl_mode=vl_mode)
+    a1 = uo.uct_argmax(n, w, zero, pn, use_ref=True, **kw)
+    a2 = uo.uct_argmax(n, w, zero, pn, interpret=True, **kw)
+    assert bool((a1 == a2).all())
+    # first-max: the winner is the LOWEST-index unvisited child
+    expect = np.asarray(jnp.argmax(n == 0.0, axis=-1))
+    assert (np.asarray(a2) == expect).all()
+    # masking the lowest unvisited column moves the tie to the next one
+    valid2 = valid.at[rows[:, 0], expect].set(False)
+    kw["valid"] = valid2
+    b1 = uo.uct_argmax(n, w, zero, pn, use_ref=True, **kw)
+    b2 = uo.uct_argmax(n, w, zero, pn, interpret=True, **kw)
+    assert bool((b1 == b2).all())
+    assert not (np.asarray(b2) == expect).any()
+
+
+@pytest.mark.parametrize("r,a", [(7, 4), (300, 8), (64, 130), (1, 2)])
+def test_uct_argmax_kernel_wu_mode(r, a):
+    """WU-UCT scoring (vl_mode="wu"): the O operand feeds exploration only.
+    Ref and Pallas agree bit-for-bit; the vloss operand is ignored; with
+    O == 0 the wu ranking falls back to loss-with-no-vloss exactly."""
+    from repro.kernels.uct_select import ops as uo
+    ks = jax.random.split(jax.random.key(16), 5)
+    n = jax.random.randint(ks[0], (r, a), 0, 50).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (r, a)) * 3
+    vl = jax.random.randint(ks[2], (r, a), 0, 3).astype(jnp.float32)
+    o = jax.random.randint(ks[3], (r, a), 0, 5).astype(jnp.float32)
+    pn = n.sum(-1) + 1 + o.sum(-1)
+    valid = jax.random.bernoulli(ks[4], 0.8, (r, a)).at[:, 0].set(True)
+    kw = dict(cp=1.4, valid=valid, vl_mode="wu")
+    a1 = uo.uct_argmax(n, w, vl, pn, child_o=o, use_ref=True, **kw)
+    a2 = uo.uct_argmax(n, w, vl, pn, child_o=o, interpret=True, **kw)
+    assert bool((a1 == a2).all())
+    # vloss never reaches the wu formula
+    a3 = uo.uct_argmax(n, w, vl * 0, pn, child_o=o, interpret=True, **kw)
+    assert bool((a2 == a3).all())
+    # O == 0 and vloss == 0: both modes compute the same scores
+    z = jnp.zeros((r, a))
+    wu0 = uo.uct_argmax(n, w, z, pn, child_o=z, interpret=True, **kw)
+    ls0 = uo.uct_argmax(n, w, z, pn, cp=1.4, valid=valid, interpret=True)
+    assert bool((wu0 == ls0).all())
+
+
+def test_uct_argmax_kernel_wu_all_masked_rows():
+    """The all-lanes-done edge under wu mode: fully-masked rows return 0 on
+    both paths, matching the loss-mode contract."""
+    from repro.kernels.uct_select import ops as uo
+    lanes, a = 8, 4
+    ks = jax.random.split(jax.random.key(17), 3)
+    n = jax.random.randint(ks[0], (lanes, a), 0, 9).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (lanes, a))
+    o = jax.random.randint(ks[2], (lanes, a), 0, 4).astype(jnp.float32)
+    pn = n.sum(-1) + 1 + o.sum(-1)
+    none = jnp.zeros((lanes, a), bool)
+    kw = dict(cp=1.4, valid=none, child_o=o, vl_mode="wu")
+    z1 = uo.uct_argmax(n, w, o * 0, pn, use_ref=True, **kw)
+    z2 = uo.uct_argmax(n, w, o * 0, pn, interpret=True, **kw)
+    assert bool((z1 == 0).all()) and bool((z2 == 0).all())
+
+
 # ---------------------------------------------------------------------------
 # flash backward (custom VJP) vs autodiff-through-sdpa
 # ---------------------------------------------------------------------------

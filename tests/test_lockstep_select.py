@@ -122,6 +122,30 @@ def test_lockstep_statistical_parity(method):
 
 
 @pytest.mark.parametrize("method", METHODS)
+def test_wu_lockstep_statistical_parity_with_scan(method):
+    """WU-UCT in-flight statistics (vl_mode="wu", DESIGN.md §15) change the
+    per-seed trajectories but not the distribution: aggregate root-visit
+    fractions of wu-lockstep at lanes=8 agree with the scan baseline within
+    tolerance, and both find the true optimum."""
+    seeds, budget, lanes = 6, 512, 8
+    agg = {}
+    for name, ws, vm in (("scan", "scan", "loss"),
+                         ("wu", "lockstep", "wu")):
+        sp = SearchParams(cp=0.7, max_depth=6, wave_select=ws, vl_mode=vm)
+        cfg = SearchConfig(method=method, budget=budget, lanes=lanes,
+                           params=sp, keep_tree=False)
+        fn = jax.jit(lambda r: search(DOM, cfg, r).action_visits)
+        v = np.zeros(DOM.num_actions)
+        for s in range(seeds):
+            v += np.asarray(fn(jax.random.key(s)))
+        agg[name] = v / v.sum()
+    l1 = float(np.abs(agg["scan"] - agg["wu"]).sum())
+    assert l1 < 0.25, (agg, l1)
+    assert int(np.argmax(agg["wu"])) == int(np.argmax(agg["scan"]))
+    assert int(np.argmax(agg["wu"])) == optimal_root_action(DOM)
+
+
+@pytest.mark.parametrize("method", METHODS)
 @pytest.mark.parametrize("lanes", (4, 8))
 def test_lockstep_invariants(method, lanes):
     res = _run(method, "lockstep", lanes, budget=256)
@@ -198,3 +222,10 @@ def test_mcts_decode_config_threads_wave_select():
     scfg = MCTSDecodeConfig(wave_select="lockstep").search_config()
     assert scfg.params.resolved_wave_select == "lockstep"
     assert MCTSDecodeConfig().search_config().params.wave_select == "auto"
+
+
+def test_mcts_decode_config_threads_vl_mode():
+    from repro.serving.mcts_decode import MCTSDecodeConfig
+    assert MCTSDecodeConfig(vl_mode="wu").search_config().params.vl_mode \
+        == "wu"
+    assert MCTSDecodeConfig().search_config().params.vl_mode == "loss"

@@ -89,6 +89,45 @@ def test_virtual_loss_discourages_inflight(seed):
 
 
 # ---------------------------------------------------------------------------
+# in-flight accounting invariant (DESIGN.md §15: no vloss/unobs leaks)
+# ---------------------------------------------------------------------------
+_DRAIN_DOM = []
+
+
+def _drain_domain():
+    if not _DRAIN_DOM:
+        from repro.core.domains.pgame import PGameDomain
+        _DRAIN_DOM.append(PGameDomain(num_actions=3, game_depth=5,
+                                      binary_reward=False, seed=7))
+    return _DRAIN_DOM[0]
+
+
+@settings(max_examples=24, deadline=None)
+@given(method=st.sampled_from(("tree", "pipeline")),
+       ws=st.sampled_from(("scan", "lockstep", "mega")),
+       vl_mode=st.sampled_from(("loss", "wu")),
+       lanes=st.sampled_from((1, 3, 4)),
+       budget=st.sampled_from((9, 24)),
+       seed=st.integers(0, 2**16))
+def test_inflight_planes_drain_after_completed_rounds(
+        method, ws, vl_mode, lanes, budget, seed):
+    """Whatever the strategy, Select order, in-flight mode, wave width, and
+    budget (including masked drain ticks and lane-rounded budgets), every
+    initiated playout is eventually backed up: both the ``vloss`` and the
+    ``unobs`` plane return to all-zeros once the search completes.  This is
+    the no-leak contract of select/expand (+1) vs backup (-1) — a masked,
+    terminal, or drained lane must never leave a residual count."""
+    from repro.search import SearchConfig, SearchParams, search
+    dom = _drain_domain()
+    sp = SearchParams(cp=0.9, max_depth=5, kernels="ref", wave_select=ws,
+                      vl_mode=vl_mode)
+    cfg = SearchConfig(method=method, budget=budget, lanes=lanes, params=sp)
+    res = jax.jit(lambda r: search(dom, cfg, r))(jax.random.key(seed))
+    assert bool((res.tree.vloss == 0).all()), (method, ws, vl_mode)
+    assert bool((res.tree.unobs == 0).all()), (method, ws, vl_mode)
+
+
+# ---------------------------------------------------------------------------
 # sharding rules properties
 # ---------------------------------------------------------------------------
 class _FakeMesh:

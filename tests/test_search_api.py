@@ -56,6 +56,22 @@ def test_visits_conservation_at_root(method):
         assert bool((res.tree["vloss"] == 0).all())
 
 
+@pytest.mark.parametrize("method", METHODS)
+def test_duplicates_stat_means_one_thing(method):
+    """``duplicates`` = "the selected leaf already had in-flight playouts"
+    (strategies.py docstring) for every strategy.  Single-trajectory
+    strategies (sequential/root/leaf — one playout in flight at a time) and
+    tree-parallel at lanes=1 (each round drains before the next Select)
+    must measure exactly 0; wave strategies with real concurrency must
+    measure > 0 (the first wave's co-located lanes share the root leaf)."""
+    if method in ("sequential", "root", "leaf"):
+        assert int(_run(method, budget=64, lanes=4).stats["duplicates"]) == 0
+        return
+    if method == "tree":
+        assert int(_run(method, budget=64, lanes=1).stats["duplicates"]) == 0
+    assert int(_run(method, budget=128, lanes=8).stats["duplicates"]) > 0
+
+
 def test_sequential_pipeline_agree_at_lanes1():
     """lanes=1 pipeline is the linear pipeline — same trajectory structure as
     sequential, so at a converged budget both recommend the optimum."""

@@ -1,0 +1,216 @@
+"""WU-UCT in-flight statistics (``vl_mode="wu"``, DESIGN.md §15).
+
+The acceptance bar of the WU-UCT ISSUE, proven four ways:
+
+* the Q-corruption fix itself — wu-mode Q is BIT-IDENTICAL whether 0 or 8
+  playouts are in flight through a child, while loss-mode Q moves (the bug
+  the mode exists to remove);
+* wu bit-for-bit parity across the scan / lockstep / mega wave_select
+  paths at ``lanes == 1`` for all five strategies (`kernels="ref"`; the
+  Pallas megakernel twin is covered below in interpret mode — strategy-level
+  Pallas launches need a TPU);
+* wu ref fused round/tick vs the Pallas megakernel (interpret=True) —
+  bit-for-bit over every arena plane at lanes 1/4/8, including the new
+  ``unobs`` plane riding the input/output-aliased in-flight slot;
+* single-flight strategies (sequential / root / leaf — never more than one
+  playout in flight at selection time) are bitwise UNCHANGED by the mode.
+
+Post-run invariants (unobs drained to zero) ride along on every case.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stages as S
+from repro.core import uct
+from repro.core.domains.pgame import PGameDomain
+from repro.core.tree import check_consistency, init_tree
+from repro.kernels.search_wave import ops, ref
+from repro.search import SearchConfig, SearchParams, search
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
+SP_WU = S.SearchParams(cp=0.7, max_depth=6, kernels="ref", vl_mode="wu")
+ALL_METHODS = ("sequential", "root", "leaf", "tree", "pipeline")
+PLANES = ("visits", "value", "vloss", "unobs", "children", "parent",
+          "action", "prior", "terminal", "next_free", "free_top")
+
+
+def _assert_same_arena(ta, tb, msg=""):
+    for f in PLANES:
+        np.testing.assert_array_equal(np.asarray(getattr(ta, f)),
+                                      np.asarray(getattr(tb, f)),
+                                      err_msg=f"{msg}{f}")
+
+
+def _run(method, ws, lanes, seed=0, budget=64, vl_mode="wu"):
+    sp = SearchParams(cp=0.7, max_depth=6, wave_select=ws, kernels="ref",
+                      vl_mode=vl_mode)
+    cfg = SearchConfig(method=method, budget=budget, lanes=lanes, params=sp)
+    return jax.jit(lambda r: search(DOM, cfg, r))(jax.random.key(seed))
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.action_visits),
+                                  np.asarray(b.action_visits))
+    np.testing.assert_array_equal(np.asarray(a.action_value),
+                                  np.asarray(b.action_value))
+    if a.tree is not None and b.tree is not None:   # root keeps no tree
+        for k in ("visits", "value", "children", "vloss", "unobs"):
+            np.testing.assert_array_equal(np.asarray(getattr(a.tree, k)),
+                                          np.asarray(getattr(b.tree, k)),
+                                          err_msg=k)
+    for k in a.stats:
+        assert int(a.stats[k]) == int(b.stats[k]), k
+
+
+# ---------------------------------------------------------------------------
+# the fix itself: in-flight playouts cannot move wu-mode Q
+# ---------------------------------------------------------------------------
+def test_wu_q_bit_identical_under_inflight_playouts():
+    """Q with 0 in-flight playouts == Q with 8 in-flight playouts, bitwise.
+    Measured through the exploration-free slice of uct_scores (cp=0) so the
+    score IS Q; the loss-mode control shows the corruption being removed."""
+    n = jnp.asarray([[5.0, 9.0, 2.0, 1.0]])
+    w = jnp.asarray([[2.5, -3.0, 1.0, 0.5]])
+    zero = jnp.zeros_like(n)
+    eight = jnp.full_like(n, 8.0)
+    pn = n.sum(-1)
+    q_idle = uct.uct_scores(n, w, zero, pn, 0.0, child_o=zero, vl_mode="wu")
+    q_busy = uct.uct_scores(n, w, eight, pn + 32, 0.0, child_o=eight,
+                            vl_mode="wu")
+    np.testing.assert_array_equal(np.asarray(q_idle), np.asarray(q_busy))
+    np.testing.assert_array_equal(np.asarray(q_idle), np.asarray(w / n))
+    # control: classic virtual loss drags Q down while playouts are in flight
+    l_idle = uct.uct_scores(n, w, zero, pn, 0.0, vl_mode="loss")
+    l_busy = uct.uct_scores(n, w, eight, pn + 32, 0.0, vl_mode="loss")
+    assert bool((np.asarray(l_busy) < np.asarray(l_idle)).all())
+
+
+def test_wu_inflight_widens_exploration_only():
+    """O feeds the explore term: with cp > 0 an in-flight child's score
+    drops below its idle score by exactly the explore-term shrinkage."""
+    n = jnp.asarray([[4.0, 4.0]])
+    w = jnp.asarray([[1.0, 1.0]])
+    o = jnp.asarray([[0.0, 6.0]])
+    pn = n.sum(-1) + o.sum(-1)
+    s = uct.uct_scores(n, w, jnp.zeros_like(n), pn, 1.0, child_o=o,
+                       vl_mode="wu")
+    s = np.asarray(s)[0]
+    q = 1.0 / 4.0
+    np.testing.assert_allclose(s[0], q + np.sqrt(np.log(14.0) / 4.0),
+                               rtol=1e-6)
+    np.testing.assert_allclose(s[1], q + np.sqrt(np.log(14.0) / 10.0),
+                               rtol=1e-6)
+    assert s[1] < s[0]
+
+
+# ---------------------------------------------------------------------------
+# acceptance bar: wu bit-for-bit across scan / lockstep / mega at lanes=1
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ALL_METHODS)
+@pytest.mark.parametrize("ws", ("lockstep", "mega"))
+def test_wu_wave_select_parity_at_lanes1(method, ws):
+    a = _run(method, "scan", 1)
+    b = _run(method, ws, 1)
+    _assert_same_result(a, b)
+
+
+@pytest.mark.parametrize("method", ("sequential", "root", "leaf"))
+def test_wu_equals_loss_for_single_flight_strategies(method):
+    """Never more than one playout in flight at selection time, so the two
+    modes select identical children — bitwise-equal runs."""
+    a = _run(method, "scan", 4, vl_mode="loss")
+    b = _run(method, "scan", 4, vl_mode="wu")
+    _assert_same_result(a, b)
+
+
+@pytest.mark.parametrize("method", ("tree", "pipeline"))
+@pytest.mark.parametrize("ws", ("scan", "lockstep", "mega"))
+@pytest.mark.parametrize("lanes", (1, 4))
+def test_wu_unobs_drains_and_invariants(method, ws, lanes):
+    res = _run(method, ws, lanes, budget=96)
+    c = check_consistency(res.tree)
+    assert bool(c["unobs_drained"]), c
+    assert bool(c["vloss_drained"]), c
+    assert bool(c["visit_flow"]), c
+    assert int(res.tree.visits[0]) == 96
+
+
+# ---------------------------------------------------------------------------
+# wu ref fused wave vs the Pallas megakernel (interpret mode), bit-for-bit
+# ---------------------------------------------------------------------------
+def _scan_rounds(fn, lanes, rounds, seed, nodes=64):
+    tree0 = init_tree(DOM, nodes)
+    def body(tree, rng):
+        tree, sel = fn(tree, lanes, rng)
+        return tree, sel["dup"].sum()
+    rngs = jax.random.split(jax.random.key(seed), rounds)
+    return jax.lax.scan(body, tree0, rngs)
+
+
+@pytest.mark.parametrize("lanes", (1, 4, 8))
+def test_wu_pallas_interpret_round_bitwise_equals_ref(lanes):
+    ta, da = _scan_rounds(
+        lambda t, l, r: ref.tree_round(t, DOM, SP_WU, l, jnp.asarray(True), r),
+        lanes, 6, 0)
+    tb, db = _scan_rounds(
+        lambda t, l, r: ops.tree_round(t, DOM, SP_WU, l, jnp.asarray(True), r,
+                                       impl="pallas", interpret=True),
+        lanes, 6, 0)
+    _assert_same_arena(ta, tb)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+    assert bool((np.asarray(ta.unobs) == 0).all())
+
+
+def _scan_ticks(fn, lanes, ticks, seed, nodes=64):
+    tree = init_tree(DOM, nodes)
+    carry = (tree, S.empty_selection(SP_WU, lanes),
+             S.empty_expansion(SP_WU, lanes, DOM),
+             S.empty_playout(SP_WU, lanes, DOM.num_actions))
+    def body(c, inp):
+        t, rng = inp
+        tree, se, ep, pb = c
+        tree, se, ep, pb = fn(tree, lanes, t < ticks - 3, se, ep, pb, rng)
+        return (tree, se, ep, pb), se["dup"].sum()
+    rngs = jax.random.split(jax.random.key(seed), ticks)
+    (tree, *_), dups = jax.lax.scan(body, carry, (jnp.arange(ticks), rngs))
+    return tree, dups
+
+
+@pytest.mark.parametrize("lanes", (1, 4, 8))
+def test_wu_pallas_interpret_tick_bitwise_equals_ref(lanes):
+    ta, da = _scan_ticks(
+        lambda t, l, wv, se, ep, pb, r:
+            ref.pipeline_tick(t, DOM, SP_WU, l, wv, se, ep, pb, r),
+        lanes, 9, 1)
+    tb, db = _scan_ticks(
+        lambda t, l, wv, se, ep, pb, r:
+            ops.pipeline_tick(t, DOM, SP_WU, l, wv, se, ep, pb, r,
+                              impl="pallas", interpret=True),
+        lanes, 9, 1)
+    _assert_same_arena(ta, tb)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+    assert bool((np.asarray(ta.unobs) == 0).all())
+
+
+# ---------------------------------------------------------------------------
+# knob surface
+# ---------------------------------------------------------------------------
+def test_vl_mode_validation_and_default():
+    assert SearchParams().vl_mode == "loss"
+    assert SearchParams(vl_mode="wu").wu
+    assert not SearchParams().wu
+    with pytest.raises(ValueError, match="vl_mode"):
+        SearchParams(vl_mode="nope")
+    with pytest.raises(ValueError, match="vl_mode"):
+        uct.uct_scores(jnp.ones((1, 2)), jnp.ones((1, 2)), jnp.ones((1, 2)),
+                       jnp.ones((1,)), 1.0, vl_mode="nope")
+
+
+def test_search_config_threads_vl_mode():
+    cfg = SearchConfig(vl_mode="wu")
+    assert cfg.params.vl_mode == "wu"
+    # an explicit params vl_mode wins over the config-level convenience knob
+    sp = SearchParams(vl_mode="wu")
+    assert SearchConfig(params=sp).params.vl_mode == "wu"

@@ -39,7 +39,7 @@ DEF_RE = re.compile(r"^def (run_\w+)\s*\(", re.MULTILINE)
 # the stage buffers / serving carries legitimately use as dict keys
 # ("value", "state", "action", ...) are deliberately NOT policed — the set
 # below is unambiguous to the arena.
-PLANES = ("visits", "vloss", "children", "next_free", "free_list",
+PLANES = ("visits", "vloss", "unobs", "children", "next_free", "free_list",
           "free_top", "terminal", "prior")
 # arena.py/tree.py own the shim; search_wave/ops.py stages planes into a
 # plain dict of kernel operands (2-D views, not the tree) keyed by plane.
@@ -49,6 +49,14 @@ PLANE_ALLOWED = {"repro/core/arena.py", "repro/core/tree.py",
 # regex targets ``<expr>["plane"]`` via the closing-bracket/name prefix.
 PLANE_CTX_RE = re.compile(
     r"""[\w\)\]]\s*\[\s*['"](%s)['"]\s*\]""" % "|".join(PLANES))
+
+# The WU-UCT unobserved-count plane (DESIGN.md §15) is core-private
+# bookkeeping: its vl_mode pairing with ``vloss`` is owned by
+# ``core.stages.infl_plane`` / ``with_infl``.  Indexing ``.unobs`` directly
+# (subscript or ``.at[...]`` update) outside ``repro/core/`` bypasses that
+# contract — kernels receive the active plane as a staged operand instead.
+UNOBS_DIRECT_RE = re.compile(r"\.unobs\s*(?:\[|\.\s*at\b)")
+UNOBS_ALLOWED_PREFIX = "repro/core/"
 
 
 def check(src_root: pathlib.Path) -> list:
@@ -71,6 +79,13 @@ def check(src_root: pathlib.Path) -> list:
                         (rel, f"line {i}: dict-style tree plane access "
                               f'[{m.group(1)!r}] — the tree is a typed '
                               "TreeArena; use attribute access / .replace()"))
+        if not rel.startswith(UNOBS_ALLOWED_PREFIX):
+            for i, line in enumerate(text.splitlines(), 1):
+                if UNOBS_DIRECT_RE.search(line):
+                    violations.append(
+                        (rel, f"line {i}: direct '.unobs' plane indexing "
+                              "outside repro/core/ — go through "
+                              "stages.infl_plane / with_infl"))
     return violations
 
 
