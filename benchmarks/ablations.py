@@ -25,15 +25,23 @@ SEEDS = 10
 
 
 def _strength_dup(sp, lanes, budget=BUDGET, seeds=SEEDS):
+    """(strength, dup_rate, dup_within_rate, dup_cross_rate) — the dup split
+    attributes decorrelation to its source: within-level stacking (what
+    ``level_assign="running"`` removes) vs cross-wave in-flight overlap."""
     cfg = SearchConfig(method="pipeline", budget=budget, lanes=lanes,
                        params=sp, keep_tree=False)
     f = jax.jit(lambda r: search(DOM, cfg, r))
-    acts, dups = [], []
+    acts, dups, dw, dc = [], [], [], []
     for s in range(seeds):
         res = f(jax.random.key(s))
         acts.append(int(res.best_action))
         dups.append(int(res.stats["duplicates"]))
-    return strength(acts, optimal_root_action(DOM)), float(np.mean(dups)) / budget
+        dw.append(int(res.extras["dup_within"]))
+        dc.append(int(res.extras["dup_cross"]))
+    return (strength(acts, optimal_root_action(DOM)),
+            float(np.mean(dups)) / budget,
+            float(np.mean(dw)) / budget,
+            float(np.mean(dc)) / budget)
 
 
 def run(report, smoke: bool = False):
@@ -42,18 +50,32 @@ def run(report, smoke: bool = False):
     # virtual-loss weight ablation at lanes=8
     for vlw in ((0.0, 1.0) if smoke else (0.0, 0.5, 1.0, 3.0)):
         t0 = time.perf_counter()
-        st, dup = _strength_dup(SearchParams(cp=0.7, max_depth=6,
-                                             vl_weight=vlw), 8, budget, seeds)
+        st, dup, dw, dc = _strength_dup(
+            SearchParams(cp=0.7, max_depth=6, vl_weight=vlw), 8, budget,
+            seeds)
         report(f"ablate_vl_weight_{vlw}", (time.perf_counter() - t0) * 1e6,
-               f"strength={st:.2f} dup_rate={dup:.3f}")
+               f"strength={st:.2f} dup_rate={dup:.3f} "
+               f"dup_within={dw:.3f} dup_cross={dc:.3f}")
 
     # in-flight concurrency (the ILD staleness dial)
     for lanes in ((1, 16) if smoke else (1, 4, 16, 32)):
         t0 = time.perf_counter()
-        st, dup = _strength_dup(SearchParams(cp=0.7, max_depth=6), lanes,
-                                budget, seeds)
+        st, dup, dw, dc = _strength_dup(SearchParams(cp=0.7, max_depth=6),
+                                        lanes, budget, seeds)
         report(f"ablate_inflight_lanes{lanes}", (time.perf_counter() - t0) * 1e6,
-               f"strength={st:.2f} dup_rate={dup:.3f} in_flight={4 * lanes}")
+               f"strength={st:.2f} dup_rate={dup:.3f} dup_within={dw:.3f} "
+               f"dup_cross={dc:.3f} in_flight={4 * lanes}")
+
+    # within-level assignment (DESIGN.md §16): the running scan should move
+    # dup_within toward zero at fixed budget/lanes; dup_cross is untouched
+    for la in ("independent", "running"):
+        t0 = time.perf_counter()
+        st, dup, dw, dc = _strength_dup(
+            SearchParams(cp=0.7, max_depth=6, wave_select="lockstep",
+                         level_assign=la), 8, budget, seeds)
+        report(f"ablate_level_assign_{la}", (time.perf_counter() - t0) * 1e6,
+               f"strength={st:.2f} dup_rate={dup:.3f} "
+               f"dup_within={dw:.3f} dup_cross={dc:.3f}")
 
     # MoE capacity factor: drop fraction + parity vs dropless dispatch
     from repro.models.base import ModelConfig

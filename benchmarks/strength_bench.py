@@ -1,24 +1,39 @@
 """Best-action-found rate at equal wall-clock (WU-UCT vs virtual loss,
-DESIGN.md §15): {scan, vloss-lockstep, wu-lockstep} x lanes {4, 8} on the
-P-game through the *pipeline* strategy — the one CPU-visible path where
-playouts stay in flight across Select calls, so the two ``vl_mode``
-bookkeepings actually diverge (tree-lockstep drains every round and the
-modes coincide bit-for-bit there).
+DESIGN.md §15; running assignment, §16): {scan, vloss-lockstep,
+wu-lockstep, wu-running-lockstep} x lanes {4, 8} on the P-game through the
+*pipeline* strategy — the one CPU-visible path where playouts stay in
+flight across Select calls, so the two ``vl_mode`` bookkeepings actually
+diverge (tree-lockstep drains every round and the modes coincide
+bit-for-bit there).
 
 Equal wall-clock protocol:
 
-* ``vloss_lockstep`` and ``wu_lockstep`` run the SAME budget — the two
-  modes trace the same compute graph (one in-flight plane, one formula
-  branch), so equal budget IS equal wall-clock, and their comparison is
-  seed-deterministic (no timing noise in the gate);
+* ``vloss_lockstep``, ``wu_lockstep`` and ``wu_running_lockstep`` run the
+  SAME budget — the modes trace the same compute graph (one in-flight
+  plane, one formula branch; running adds a lane scan that is in the graph
+  either way), so equal budget IS equal wall-clock, and their comparison
+  is seed-deterministic (no timing noise in the gate);
 * ``scan`` is re-budgeted so its measured search time matches lockstep's
   (calibrated per lanes count, clamped to [B/2, 2B] against CI jitter) —
   informational, not gated.
 
-CI gates ``strength(wu_lockstep) >= strength(vloss_lockstep)`` on the
-smoke row (lanes=8): removing the virtual-loss Q corruption must not cost
-strength at equal compute.  cp=0.1 keeps selection exploit-heavy, where
-corrupted Q actually changes decisions.
+CI gates, on the smoke rows (lanes=8) — each gate is a matched pair (same
+cp/budget/seeds inside the pair, only the knob under test differs):
+
+* ``strength(wu_lockstep) >= strength(vloss_lockstep)`` at cp=0.1 —
+  removing the virtual-loss Q corruption must not cost strength at equal
+  compute.  cp=0.1 keeps selection exploit-heavy, where corrupted Q
+  actually changes decisions;
+* ``strength(wu_running_lockstep) >= strength(wu_indep_lockstep)`` and
+  ``dup(wu_running_lockstep) < dup(wu_indep_lockstep)`` at cp=0.3 — the
+  within-level running assignment must spread co-located lanes (fewer
+  duplicate selections) without costing strength.  cp=0.3 gives siblings
+  enough exploration credit that within-level stacking is the binding
+  waste (at cp=0.1 lanes re-converge on the Q-argmax child regardless of
+  assignment and the comparison measures noise).
+
+Every row reports its mean per-search ``duplicates`` stat as ``dup=`` so
+the decorrelation is visible alongside strength.
 """
 from __future__ import annotations
 
@@ -33,18 +48,26 @@ from repro.search import SearchConfig, SearchParams, search
 DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=11)
 CP = 0.1
 BUDGET = 96
+# the level_assign pair runs at its own matched settings (module docstring)
+RUN_CP = 0.3
+RUN_BUDGET = 80
 METHOD = "pipeline"
 
 
-def _cfg(ws: str, vl_mode: str, lanes: int, budget: int) -> SearchConfig:
-    sp = SearchParams(cp=CP, max_depth=6, wave_select=ws, vl_mode=vl_mode)
+def _cfg(ws: str, vl_mode: str, lanes: int, budget: int,
+         level_assign: str = "independent", cp: float = CP) -> SearchConfig:
+    sp = SearchParams(cp=cp, max_depth=6, wave_select=ws, vl_mode=vl_mode,
+                      level_assign=level_assign)
     return SearchConfig(method=METHOD, budget=budget, lanes=lanes,
                         params=sp, keep_tree=False)
 
 
 def _searcher(cfg: SearchConfig):
-    fn = jax.jit(lambda r: search(DOM, cfg, r).action_visits)
-    fn(jax.random.key(0)).block_until_ready()      # compile outside timing
+    def one(r):
+        res = search(DOM, cfg, r)
+        return res.action_visits, res.stats["duplicates"]
+    fn = jax.jit(one)
+    jax.block_until_ready(fn(jax.random.key(0)))   # compile outside timing
     return fn
 
 
@@ -52,16 +75,20 @@ def _time_one(fn, iters: int = 3) -> float:
     best = float("inf")
     for i in range(iters):
         t0 = time.perf_counter()
-        fn(jax.random.key(i)).block_until_ready()
+        jax.block_until_ready(fn(jax.random.key(i)))
         best = min(best, time.perf_counter() - t0)
     return best
 
 
-def _strength(fn, seeds: int) -> float:
+def _strength(fn, seeds: int):
+    """(best-action hit rate, mean per-search duplicates) over seeds."""
     opt = optimal_root_action(DOM)
-    hits = sum(int(np.argmax(np.asarray(fn(jax.random.key(s))))) == opt
-               for s in range(seeds))
-    return hits / seeds
+    hits, dups = 0, 0.0
+    for s in range(seeds):
+        visits, dup = fn(jax.random.key(s))
+        hits += int(np.argmax(np.asarray(visits)) == opt)
+        dups += float(dup)
+    return hits / seeds, dups / seeds
 
 
 def run(report, smoke: bool = False):
@@ -75,9 +102,16 @@ def run(report, smoke: bool = False):
         sb = max(BUDGET // 2, min(2 * BUDGET, sb))
         scan_eq = _searcher(_cfg("scan", "loss", lanes, sb))
         wu = _searcher(_cfg("lockstep", "wu", lanes, BUDGET))
-        for name, fn, b, t in (("scan", scan_eq, sb, _time_one(scan_eq)),
-                               ("vloss_lockstep", lock, BUDGET, t_lock),
-                               ("wu_lockstep", wu, BUDGET, _time_one(wu))):
-            s = _strength(fn, seeds)
+        indep = _searcher(_cfg("lockstep", "wu", lanes, RUN_BUDGET,
+                               "independent", RUN_CP))
+        run_ = _searcher(_cfg("lockstep", "wu", lanes, RUN_BUDGET,
+                              "running", RUN_CP))
+        for name, fn, b, t in (
+                ("scan", scan_eq, sb, _time_one(scan_eq)),
+                ("vloss_lockstep", lock, BUDGET, t_lock),
+                ("wu_lockstep", wu, BUDGET, _time_one(wu)),
+                ("wu_indep_lockstep", indep, RUN_BUDGET, _time_one(indep)),
+                ("wu_running_lockstep", run_, RUN_BUDGET, _time_one(run_))):
+            s, d = _strength(fn, seeds)
             report(f"strength_{name}_lanes{lanes}", t * 1e6,
-                   f"strength={s:.3f} budget={b} seeds={seeds}")
+                   f"strength={s:.3f} dup={d:.2f} budget={b} seeds={seeds}")

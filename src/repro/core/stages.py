@@ -36,6 +36,12 @@ Kernel/selection knobs (DESIGN.md §11/§14) — one consolidated pair on
       Bit-for-bit equal to "lockstep" at ``lanes == 1``.
     - "auto"     — "mega" when the resolved kernels are Pallas, else "scan"
       (preserving the historical CPU default).
+* ``level_assign`` — within-level lane assignment for the depth-major paths
+  (lockstep/mega; DESIGN.md §16): "independent" scores every lane against an
+  identical board (co-located lanes stack), "running" threads a
+  running-assignment scan through the batched level pass so lane k sees
+  lanes 0..k-1's same-level picks and co-located lanes spread.  No-op for
+  "scan" (lane-major already serializes whole descents).
 """
 from __future__ import annotations
 
@@ -53,6 +59,7 @@ from repro.core.tree import ROOT, UNEXPANDED, Tree, get_state, max_nodes
 
 WAVE_SELECT_MODES = ("auto", "scan", "lockstep", "mega")
 KERNEL_MODES = ("auto", "pallas", "ref")
+LEVEL_ASSIGN_MODES = ("independent", "running")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +77,16 @@ class SearchParams:
     kernels: str = "auto"
     # Select-stage iteration order (see module docstring).
     wave_select: str = "auto"
+    # Within-level lane assignment for the depth-major paths (DESIGN.md §16):
+    # "independent" — co-located lanes score an identical board and may stack
+    # on one child until Expand fans them out (the historical behaviour);
+    # "running"     — a running-assignment scan inside the batched level
+    # pass: lane k scores with the in-flight plane already incremented by
+    # lanes 0..k-1's picks at that same level, so one launch per level still
+    # serves the whole wave but co-located lanes spread over viable
+    # children.  A documented no-op for wave_select="scan" (the lane-major
+    # descent already sees earlier lanes' counts at every level).
+    level_assign: str = "independent"
     # DEPRECATED: the old boolean kernel switch.  Accepted and forwarded
     # into ``kernels`` ("pallas"/"ref") when ``kernels`` is left at "auto".
     use_pallas: Optional[bool] = None
@@ -78,6 +95,10 @@ class SearchParams:
         if self.vl_mode not in uct.VL_MODES:
             raise ValueError(
                 f"vl_mode must be one of {uct.VL_MODES}, got {self.vl_mode!r}")
+        if self.level_assign not in LEVEL_ASSIGN_MODES:
+            raise ValueError(
+                f"level_assign must be one of {LEVEL_ASSIGN_MODES}, "
+                f"got {self.level_assign!r}")
         if self.use_pallas is not None:
             warnings.warn(
                 "SearchParams.use_pallas is deprecated; use "
@@ -91,6 +112,10 @@ class SearchParams:
     @property
     def wu(self) -> bool:
         return self.vl_mode == "wu"
+
+    @property
+    def running(self) -> bool:
+        return self.level_assign == "running"
 
     @property
     def path_len(self) -> int:
@@ -127,6 +152,8 @@ def empty_selection(sp: SearchParams, lanes: int):
         "depth": jnp.zeros((lanes,), jnp.int32),
         "valid": jnp.zeros((lanes,), bool),
         "dup": jnp.zeros((lanes,), bool),
+        "dup_within": jnp.zeros((lanes,), bool),
+        "dup_cross": jnp.zeros((lanes,), bool),
     }
 
 
@@ -206,11 +233,22 @@ def select_one(tree: Tree, sp: SearchParams, valid):
 def select_wave_scan(tree: Tree, sp: SearchParams, lanes: int, valid):
     """Lane-major Select: lane i+1 sees lane i's virtual loss (paper Fig. 5:
     one serial Select stage feeding multiple playout stages)."""
+    infl_pre = infl_plane(tree, sp)   # in-flight counts before this wave
+
     def body(tr, _):
         tr, sel = select_one(tr, sp, valid)
         return tr, sel
 
     tree, sels = jax.lax.scan(body, tree, None, length=lanes)
+    # split the dup event (a leaf that already had in-flight playouts) into
+    # its two sources: an earlier unfinished wave (cross) vs a lower-numbered
+    # valid lane of THIS wave (within).  Only a same-wave lane's own leaf can
+    # carry within-wave in-flight counts — interior path nodes are fully
+    # expanded and can never be another lane's leaf — so dup == within|cross.
+    leaf, v = sels["leaf"], sels["valid"]
+    sels["dup_within"] = (jnp.tril(leaf[:, None] == leaf[None, :], k=-1)
+                          & v[None, :]).any(axis=1) & v
+    sels["dup_cross"] = (infl_pre[leaf] > 0) & v
     return tree, sels
 
 
@@ -224,10 +262,17 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
     The in-flight count (``vloss`` in "loss" mode, ``unobs`` in "wu" mode)
     is applied per level: every selected child gets +1 before the next
     level's scores are computed, so deeper levels see the whole wave's
-    in-flight counts (tree-parallel decorrelation), while lanes at the SAME
-    level pick independently.  A lane's own count on its current node is
-    excluded from ``parent_n``, which makes the descent bit-for-bit
-    identical to ``select_wave_scan`` at ``lanes == 1``.
+    in-flight counts (tree-parallel decorrelation).  How lanes at the SAME
+    level see each other is ``sp.level_assign`` (DESIGN.md §16):
+    "independent" scores the whole board at once (co-located lanes pick
+    identically until Expand fans them out); "running" assigns lanes in
+    order within the level — lane k's board row carries the picks of lanes
+    0..k-1 sharing its parent, so co-located lanes spread over viable
+    children while one batched call per level still serves the wave.  A
+    lane's own count on its current node is excluded from ``parent_n``,
+    which makes the descent bit-for-bit identical to ``select_wave_scan``
+    at ``lanes == 1`` in either assignment mode (the running delta is
+    identically zero for a single lane).
     Finished/invalid lanes mask out via the argmax's ``valid`` lanes.
     """
     valid = jnp.broadcast_to(jnp.asarray(valid, bool), (lanes,))
@@ -256,12 +301,18 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
         idx = jnp.maximum(ch, 0)
         own = active.astype(jnp.int32)         # own in-flight count
         pn = tree.visits[node] + infl[node] - own
-        a = uct.uct_argmax(
-            tree.visits[idx], tree.value[idx], infl[idx],
-            pn, sp.cp, vl_weight=sp.vl_weight, prior=tree.prior[node],
-            puct=sp.puct, valid=(ch >= 0) & active[:, None],
-            use_pallas=sp.pallas_enabled,
-            child_o=infl[idx], vl_mode=sp.vl_mode)
+        kw = dict(vl_weight=sp.vl_weight, prior=tree.prior[node],
+                  puct=sp.puct, valid=(ch >= 0) & active[:, None],
+                  use_pallas=sp.pallas_enabled,
+                  child_o=infl[idx], vl_mode=sp.vl_mode)
+        if sp.running:    # lane k's row sees lanes 0..k-1's picks (§16)
+            a = uct.uct_argmax_running(
+                tree.visits[idx], tree.value[idx], infl[idx], pn, node,
+                sp.cp, **kw)
+        else:
+            a = uct.uct_argmax(
+                tree.visits[idx], tree.value[idx], infl[idx], pn, sp.cp,
+                **kw)
         nxt = ch[rows, a]
         col = jnp.where(active, depth + 1, sp.path_len)    # OOB -> dropped
         path = path.at[rows, col].set(nxt, mode="drop")
@@ -275,13 +326,17 @@ def select_wave_fused(tree: Tree, sp: SearchParams, lanes: int, valid):
         cond, body, (infl0, node0, depth0, path0, active0))
     tree = with_infl(tree, sp, infl)
     # same meaning as the scan path's dup: the lane's leaf was already
-    # in-flight when it arrived — from an earlier unfinished wave, or from a
-    # lower-numbered lane of this wave (lockstep lanes at a shared node make
-    # identical picks; the Expand stage then assigns them distinct siblings)
-    shared = jnp.tril(leaf[:, None] == leaf[None, :], k=-1).any(axis=1)
-    dup = ((infl_pre[leaf] > 0) | shared) & valid
+    # in-flight when it arrived — split into its two sources: an earlier
+    # unfinished wave (cross), or a lower-numbered lane of this wave
+    # (within — the stacking that level_assign="running" removes when the
+    # leaf's parent still has viable siblings)
+    dup_within = (jnp.tril(leaf[:, None] == leaf[None, :], k=-1)
+                  .any(axis=1)) & valid
+    dup_cross = (infl_pre[leaf] > 0) & valid
     sel = {"path": jnp.where(valid[:, None], path, UNEXPANDED),
-           "leaf": leaf, "depth": depth, "valid": valid, "dup": dup}
+           "leaf": leaf, "depth": depth, "valid": valid,
+           "dup": dup_within | dup_cross,
+           "dup_within": dup_within, "dup_cross": dup_cross}
     return tree, sel
 
 

@@ -81,3 +81,63 @@ def uct_argmax(child_n, child_w, child_vl, parent_n, cp, *, vl_weight=1.0,
     if valid is not None:
         s = jnp.where(valid, s, NEG_INF)
     return jnp.argmax(s, axis=-1).astype(jnp.int32)
+
+
+def uct_argmax_running(child_n, child_w, child_vl, parent_n, parent_id, cp, *,
+                       vl_weight=1.0, prior=None, puct=False, valid=None,
+                       use_pallas=False, interpret=False, child_o=None,
+                       vl_mode="loss"):
+    """Running-assignment argmax over one wave's ``[lanes, A]`` level board
+    (DESIGN.md §16): lanes are assigned IN ORDER, and lane k scores with the
+    in-flight counts already incremented by the picks of lanes ``0..k-1``
+    that share k's parent (``parent_id``, the node whose children row lane k
+    is scoring) at this same level.  One call still serves the whole wave —
+    the Pallas path is a single launch with a sequential row walk — but
+    co-located lanes spread over viable children instead of stacking.
+
+    The running delta joins the mode's in-flight plane before the shared
+    scoring formula: in "loss" mode it rides ``child_vl`` (affecting both Q
+    and the effective count), in "wu" mode it rides ``child_o`` (widening
+    exploration only).  ``parent_n`` is NOT adjusted — earlier lanes'
+    presence at the parent is already counted by the caller's per-level
+    plane.  A lane whose ``valid`` row is all-False contributes nothing and
+    returns index 0.  At ``lanes == 1`` the delta is identically zero, so
+    the result is bit-for-bit equal to ``uct_argmax``.
+    """
+    lanes, a = child_n.shape
+    if valid is None:
+        valid = jnp.ones((lanes, a), bool)
+    if use_pallas and not puct:
+        from repro.kernels.uct_select import ops as uops
+        return uops.uct_argmax_running(
+            child_n, child_w, child_vl, parent_n, parent_id,
+            cp=cp, vl_weight=vl_weight, valid=valid, interpret=interpret,
+            child_o=child_o, vl_mode=vl_mode)
+    if child_o is None:
+        child_o = jnp.zeros((lanes, a), jnp.int32)
+    active = valid.any(axis=-1)                            # [lanes]
+    same = parent_id[:, None] == parent_id[None, :]        # [lanes, lanes]
+    iota_a = jnp.arange(a)
+
+    def body(contrib, k):
+        # contrib[m]: same-parent picks of lanes < k, keyed on lane m's slots
+        d = contrib[k]
+        if vl_mode == "wu":
+            vl_k, o_k = child_vl[k], child_o[k] + d
+        else:
+            vl_k, o_k = child_vl[k] + d, child_o[k]
+        pn_k = parent_n[k] if jnp.ndim(parent_n) else parent_n
+        s = uct_scores(child_n[k], child_w[k], vl_k, pn_k, cp,
+                       vl_weight=vl_weight,
+                       prior=None if prior is None else prior[k],
+                       puct=puct, child_o=o_k, vl_mode=vl_mode)
+        s = jnp.where(valid[k], s, NEG_INF)
+        pick = jnp.argmax(s).astype(jnp.int32)
+        add = ((iota_a == pick) & active[k]).astype(contrib.dtype)
+        contrib = contrib + jnp.where(
+            (same[:, k] & active[k])[:, None], add[None, :], 0)
+        return contrib, pick
+
+    _, picks = jax.lax.scan(
+        body, jnp.zeros((lanes, a), jnp.float32), jnp.arange(lanes))
+    return picks

@@ -68,6 +68,7 @@ class WaveCfg:
     vl_weight: float
     puct: bool
     wu: bool = False
+    running: bool = False   # within-level running assignment (DESIGN.md §16)
 
 
 def _iota(rows: int, cols: int, dim: int):
@@ -198,24 +199,76 @@ def _select_phase(cfg: WaveCfg, vloss_ref, visits_v, value_v, prior_v,
         cvl = _gather_vec(vloss_v, idx.reshape(-1)).reshape(l, a)
         pn = (_gather_vec(visits_v, node) + _gather_vec(vloss_v, node)
               - own.astype(jnp.float32))
+        pr = _gather_rows(prior_v, node) if cfg.puct else None
         # uct_scores, formula-for-formula (core.uct); in "wu" mode cvl holds
         # the gathered O counts — they widen exploration only, Q is computed
         # from completed statistics alone
-        n_eff = cn + cvl
-        pnc = jnp.maximum(pn, 1.0)
-        if cfg.wu:
-            q = cw / jnp.maximum(cn, 1.0)
+        if cfg.running:
+            # Running assignment (DESIGN.md §16): a sequential lane walk —
+            # lane i scores with a running delta already incremented by the
+            # picks of co-located lanes < i at this level.  The delta joins
+            # cvl (the mode's staged in-flight plane), so it widens
+            # exploration in "wu" mode and also corrupts Q in "loss" mode,
+            # exactly like the jnp lane scan.  One launch per level still.
+            iota_l1 = _iota(l, 1, 0)
+            iota_1a = _iota(1, a, 1)
+            activef = active.astype(jnp.float32)[:, None]  # [L, 1]
+
+            def assign(i, carry):
+                delta, sel_acc = carry
+                rowsel = iota_l1 == i                      # [L, 1]
+                rs = rowsel.astype(jnp.float32)
+                row = lambda x: (x * rs).sum(axis=0, keepdims=True)
+                cvl_eff = row(cvl) + row(delta)            # [1, A]
+                cn_i, cw_i = row(cn), row(cw)
+                n_eff = cn_i + cvl_eff
+                pnc = jnp.maximum(row(pn[:, None]), 1.0)   # [1, 1]
+                if cfg.wu:
+                    q = cw_i / jnp.maximum(cn_i, 1.0)
+                else:
+                    q = (cw_i - cfg.vl_weight * cvl_eff) \
+                        / jnp.maximum(n_eff, 1.0)
+                if cfg.puct:
+                    explore = row(pr) * jnp.sqrt(pnc) / (1.0 + n_eff)
+                else:
+                    explore = jnp.sqrt(jnp.log(pnc)
+                                       / jnp.maximum(n_eff, 1.0))
+                s = q + cfg.cp * explore
+                s = jnp.where(n_eff < 0.5, 1e30, s)
+                ch_i = (ch * rowsel.astype(jnp.int32)).sum(axis=0,
+                                                           keepdims=True)
+                act_i = row(activef)[0, 0] > 0.5
+                s = jnp.where((ch_i >= 0) & act_i, s, NEG_INF)
+                sel_i = jnp.argmax(s, axis=1).astype(jnp.int32)    # [1]
+                oh = (iota_1a == sel_i[:, None]).astype(jnp.float32)
+                node_i = (node[:, None] * rowsel.astype(jnp.int32)) \
+                    .sum(axis=0, keepdims=True)            # [1, 1]
+                share = (node[:, None] == node_i) & act_i  # [L, 1]
+                delta = delta + share.astype(jnp.float32) * oh
+                sel_acc = jnp.where(rowsel, sel_i[:, None], sel_acc)
+                return delta, sel_acc
+
+            _, sel_acc = jax.lax.fori_loop(
+                0, l, assign,
+                (jnp.zeros((l, a), jnp.float32), jnp.zeros((l, 1),
+                                                           jnp.int32)))
+            sel_a = sel_acc[:, 0]
         else:
-            q = (cw - cfg.vl_weight * cvl) / jnp.maximum(n_eff, 1.0)
-        if cfg.puct:
-            pr = _gather_rows(prior_v, node)
-            explore = pr * jnp.sqrt(pnc)[:, None] / (1.0 + n_eff)
-        else:
-            explore = jnp.sqrt(jnp.log(pnc)[:, None] / jnp.maximum(n_eff, 1.0))
-        s = q + cfg.cp * explore
-        s = jnp.where(n_eff < 0.5, 1e30, s)
-        s = jnp.where((ch >= 0) & active[:, None], s, NEG_INF)
-        sel_a = jnp.argmax(s, axis=-1).astype(jnp.int32)
+            n_eff = cn + cvl
+            pnc = jnp.maximum(pn, 1.0)
+            if cfg.wu:
+                q = cw / jnp.maximum(cn, 1.0)
+            else:
+                q = (cw - cfg.vl_weight * cvl) / jnp.maximum(n_eff, 1.0)
+            if cfg.puct:
+                explore = pr * jnp.sqrt(pnc)[:, None] / (1.0 + n_eff)
+            else:
+                explore = jnp.sqrt(jnp.log(pnc)[:, None]
+                                   / jnp.maximum(n_eff, 1.0))
+            s = q + cfg.cp * explore
+            s = jnp.where(n_eff < 0.5, 1e30, s)
+            s = jnp.where((ch >= 0) & active[:, None], s, NEG_INF)
+            sel_a = jnp.argmax(s, axis=-1).astype(jnp.int32)
         nxt = jnp.where(iota_a == sel_a[:, None], ch, 0).sum(axis=-1) \
             .astype(jnp.int32)
         col = jnp.where(active, depth + 1, p)
@@ -232,17 +285,20 @@ def _select_phase(cfg: WaveCfg, vloss_ref, visits_v, value_v, prior_v,
         0, cfg.max_depth, body, (node0, depth0, path0, active0))
     shared = ((leaf[:, None] == leaf[None, :])
               & (_iota(l, l, 0) > _iota(l, l, 1))).any(axis=1)
-    dup = ((_gather_vec(vloss_pre.astype(jnp.float32), leaf) > 0.5)
-           | shared) & valid
+    dup_w = shared & valid                                 # within this wave
+    dup_c = (_gather_vec(vloss_pre.astype(jnp.float32), leaf) > 0.5) & valid
     path = jnp.where(valid[:, None], path, UNEXPANDED)
-    return leaf, depth, path, dup, valid
+    return leaf, depth, path, dup_w, dup_c, valid
 
 
-def _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup):
+def _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup_w,
+               dup_c):
     s_leaf[...] = leaf[:, None]
     s_depth[...] = depth[:, None]
     s_path[...] = path
-    s_dup[...] = dup[:, None].astype(jnp.int32)
+    # [L, 2]: col 0 = within-wave shared leaf, col 1 = cross-wave in-flight
+    s_dup[...] = jnp.concatenate(
+        [dup_w[:, None], dup_c[:, None]], axis=1).astype(jnp.int32)
 
 
 def _store_es(e_can, e_slot, e_new, can, slot, new_s):
@@ -265,10 +321,11 @@ def _se_kernel(vloss_in, children_in, visits, value, prior, terminal,
     terminal_v = terminal[...][:, 0].astype(jnp.float32)
     children_v = children_o[...].astype(jnp.float32)   # pre-expand snapshot
     wave_valid = scal[0, 2]
-    leaf, depth, path, dup, valid = _select_phase(
+    leaf, depth, path, dup_w, dup_c, valid = _select_phase(
         cfg, vloss_o, visits_v, value_v, prior_v, children_v, terminal_v,
         wave_valid)
-    _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup)
+    _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup_w,
+               dup_c)
     term_leaf = _gather_vec(terminal_v, leaf) > 0.5
     can, slot, new_s = _expand_phase(
         cfg, children_o, vloss_o, term_leaf, free_list,
@@ -301,10 +358,11 @@ def _bes_kernel(visits_in, value_in, vloss_in, prior_in, children_in,
     value_v = value_o[...][:, 0]
     prior_v = prior_o[...]
     children_v = children_o[...].astype(jnp.float32)
-    leaf, depth, path, dup, _ = _select_phase(
+    leaf, depth, path, dup_w, dup_c, _ = _select_phase(
         cfg, vloss_o, visits_v, value_v, prior_v, children_v, terminal_v,
         scal[0, 2])
-    _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup)
+    _store_sel(s_leaf, s_depth, s_path, s_dup, leaf, depth, path, dup_w,
+               dup_c)
 
 
 def _b_kernel(visits_in, value_in, vloss_in, prior_in,
@@ -334,7 +392,7 @@ def _sel_out_shapes(cfg: WaveCfg):
     return [jax.ShapeDtypeStruct((l, 1), jnp.int32),      # leaf
             jax.ShapeDtypeStruct((l, 1), jnp.int32),      # depth
             jax.ShapeDtypeStruct((l, p), jnp.int32),      # path
-            jax.ShapeDtypeStruct((l, 1), jnp.int32)]      # dup
+            jax.ShapeDtypeStruct((l, 2), jnp.int32)]      # dup within|cross
 
 
 def _es_out_shapes(cfg: WaveCfg):

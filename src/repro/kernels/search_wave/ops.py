@@ -32,7 +32,8 @@ def _cfg(tree: TreeArena, sp, lanes: int) -> K.WaveCfg:
     return K.WaveCfg(n=tree.max_nodes, a=tree.num_actions, lanes=lanes,
                      path_len=sp.path_len, max_depth=sp.max_depth,
                      cp=float(sp.cp), vl_weight=float(sp.vl_weight),
-                     puct=bool(sp.puct), wu=bool(getattr(sp, "wu", False)))
+                     puct=bool(sp.puct), wu=bool(getattr(sp, "wu", False)),
+                     running=bool(getattr(sp, "running", False)))
 
 
 def _infl_field(sp) -> str:
@@ -76,8 +77,10 @@ def _empty_pb(sp, lanes: int, num_actions: int):
 
 
 def _unpack_sel(s_leaf, s_depth, s_path, s_dup, valid):
+    dup_w, dup_c = s_dup[:, 0] > 0, s_dup[:, 1] > 0
     return {"path": s_path, "leaf": s_leaf[:, 0], "depth": s_depth[:, 0],
-            "valid": valid, "dup": s_dup[:, 0] > 0}
+            "valid": valid, "dup": dup_w | dup_c,
+            "dup_within": dup_w, "dup_cross": dup_c}
 
 
 def _apply_es(tree: TreeArena, sel_path, sel_depth, leafs,

@@ -58,3 +58,57 @@ def uct_argmax(child_n, child_w, child_vl, parent_n, *, vl_weight=1.0,
                              interpret=interpret)
     out = out[:r, 0]
     return out.reshape(batch_shape) if batch_shape else out[0]
+
+
+def uct_argmax_running(child_n, child_w, child_vl, parent_n, parent_id, *,
+                       vl_weight=1.0, valid=None, interpret: bool = False,
+                       use_ref: bool = False, cp=None, child_o=None,
+                       vl_mode: str = "loss"):
+    """Running-assignment variant (DESIGN.md §16): strictly ``[lanes, A]``.
+
+    Rows are a wave's lanes scored in order — lane k's in-flight plane is
+    pre-incremented by the picks of same-parent lanes < k, so the whole wave
+    stays one launch but the walk inside it is sequential.  Row padding is
+    inert (contributions flow forward-only and padded rows trail the real
+    ones with parent id -1, matching no real row), but the tile must hold
+    every lane at once, so ``blk_r`` covers all rows — no 256 cap.
+    """
+    if cp is None:
+        raise TypeError("cp is required")
+    if child_n.ndim != 2:
+        raise ValueError("uct_argmax_running expects [lanes, A] stats, got "
+                         f"shape {child_n.shape}")
+    r, a = child_n.shape
+    if valid is None:
+        valid = jnp.ones((r, a), bool)
+    if child_o is None:
+        child_o = jnp.zeros((r, a), jnp.int32)
+    if use_ref:
+        return R.uct_argmax_running_ref(
+            child_n, child_w, child_vl, parent_n, parent_id, valid,
+            cp=float(cp), vl_weight=vl_weight, child_o=child_o,
+            vl_mode=vl_mode)
+    pad_a = (-a) % 128
+    n2 = child_n.astype(jnp.float32)
+    w2 = child_w.astype(jnp.float32)
+    v2 = child_vl.astype(jnp.float32)
+    o2 = child_o.astype(jnp.float32)
+    pn = jnp.reshape(parent_n, (r, 1)).astype(jnp.float32) if jnp.ndim(parent_n) \
+        else jnp.full((r, 1), parent_n, jnp.float32)
+    pid = jnp.reshape(parent_id, (r, 1)).astype(jnp.int32)
+    va = valid.astype(jnp.int32)
+    if pad_a:
+        z = lambda x, fill: jnp.pad(x, ((0, 0), (0, pad_a)), constant_values=fill)
+        n2, w2, v2, o2, va = z(n2, 1), z(w2, 0), z(v2, 0), z(o2, 0), z(va, 0)
+    blk_r = max(8, r + (-r) % 8)               # one sublane-aligned tile
+    pad_r = blk_r - r
+    if pad_r:
+        zr = lambda x: jnp.pad(x, ((0, pad_r), (0, 0)), constant_values=1)
+        n2, w2, v2, o2, pn = zr(n2), zr(w2), zr(v2), zr(o2), zr(pn)
+        va = jnp.pad(va, ((0, pad_r), (0, 0)),
+                     constant_values=0).at[r:, 0].set(1)
+        pid = jnp.pad(pid, ((0, pad_r), (0, 0)), constant_values=-1)
+    out = K.uct_argmax_running_call(n2, w2, v2, o2, pn, va, pid,
+                                    cp=float(cp), vl_weight=float(vl_weight),
+                                    wu=(vl_mode == "wu"), interpret=interpret)
+    return out[:r, 0]

@@ -19,3 +19,13 @@ def uct_argmax_ref(child_n, child_w, child_vl, parent_n, valid, *,
                        vl_weight=vl_weight, child_o=child_o, vl_mode=vl_mode)
     s = jnp.where(valid, s, uct.NEG_INF)
     return jnp.argmax(s, axis=-1).astype(jnp.int32)
+
+
+def uct_argmax_running_ref(child_n, child_w, child_vl, parent_n, parent_id,
+                           valid, *, cp: float, vl_weight: float,
+                           child_o=None, vl_mode: str = "loss"):
+    """Oracle for the running-assignment kernel — the jnp lane scan."""
+    return uct.uct_argmax_running(
+        child_n, child_w, child_vl, parent_n, parent_id, cp,
+        vl_weight=vl_weight, valid=valid, use_pallas=False,
+        child_o=child_o, vl_mode=vl_mode)

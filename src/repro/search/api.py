@@ -88,13 +88,18 @@ class SearchConfig:
     params:    the shared UCT/virtual-loss knobs (core.stages.SearchParams).
     kernels /
     wave_select /
-    vl_mode:   top-level conveniences for the consolidated kernel pair and
-               the in-flight-statistics mode (DESIGN.md §14/§15).  Anything
-               other than the default is forwarded into ``params`` at
-               construction, so ``SearchConfig(kernels="pallas")`` ==
+    vl_mode /
+    level_assign: top-level conveniences for the consolidated kernel pair,
+               the in-flight-statistics mode, and the within-level lane
+               assignment (DESIGN.md §14/§15/§16).  Anything other than the
+               default is forwarded into ``params`` at construction, so
+               ``SearchConfig(kernels="pallas")`` ==
                ``SearchConfig(params=SearchParams(kernels="pallas"))``.
                ``vl_mode``: "loss" (virtual loss, the unchanged default) or
                "wu" (WU-UCT unobserved counts — Q from completed stats only).
+               ``level_assign``: "independent" (default) or "running" (the
+               within-level running-assignment scan — co-located lockstep
+               lanes spread instead of stacking).
     """
 
     method: str = "sequential"
@@ -106,6 +111,7 @@ class SearchConfig:
     kernels: str = "auto"
     wave_select: str = "auto"
     vl_mode: str = "loss"
+    level_assign: str = "independent"
 
     def __post_init__(self):
         upd = {}
@@ -115,6 +121,9 @@ class SearchConfig:
             upd["wave_select"] = self.wave_select
         if self.vl_mode != "loss" and self.params.vl_mode == "loss":
             upd["vl_mode"] = self.vl_mode
+        if self.level_assign != "independent" \
+                and self.params.level_assign == "independent":
+            upd["level_assign"] = self.level_assign
         if upd:
             object.__setattr__(
                 self, "params", dataclasses.replace(self.params, **upd))

@@ -140,21 +140,28 @@ def tree_parallel(domain, cfg: SearchConfig, rng) -> SearchResult:
 
     fused = sp.resolved_wave_select == "mega"
 
+    def _dup_st(sels):
+        return {"dup": sels["dup"].sum(),
+                "dup_within": sels["dup_within"].sum(),
+                "dup_cross": sels["dup_cross"].sum()}
+
     def round_fn(tree, rng_t):
         if fused:        # whole round through kernels/search_wave (§14)
             tree, sels = S.mega_round(tree, domain, sp, threads,
                                       jnp.asarray(True), rng_t)
-            return tree, {"dup": sels["dup"].sum()}
+            return tree, _dup_st(sels)
         tree, sels = S.select_wave(tree, sp, threads, jnp.asarray(True))
         tree, exps = S.expand_wave(tree, domain, sp, sels)
         po = S.playout_wave(domain, sp, exps, rng_t)
         tree = S.backup_wave(tree, po, sp)
-        return tree, {"dup": sels["dup"].sum()}
+        return tree, _dup_st(sels)
 
     tree, st = jax.lax.scan(round_fn, tree, jax.random.split(rng, rounds))
     stats = make_stats(rounds * threads, rounds * threads,
                        st["dup"].sum(), rounds)
-    return result_from_tree(tree, stats)
+    extras = {"dup_within": st["dup_within"].sum(),
+              "dup_cross": st["dup_cross"].sum()}
+    return result_from_tree(tree, stats, extras)
 
 
 @register_strategy("pipeline")
@@ -198,6 +205,8 @@ def pipeline(domain, cfg: SearchConfig, rng) -> SearchResult:
             tree, new_se = S.select_wave(tree, sp, lanes, wave_valid)
         st = {
             "dup": new_se["dup"].sum(),
+            "dup_within": new_se["dup_within"].sum(),
+            "dup_cross": new_se["dup_cross"].sum(),
             "completed": buf_pb["valid"].sum(),
             "occupancy": (new_se["valid"].any().astype(jnp.int32)
                           + buf_se["valid"].any().astype(jnp.int32)
@@ -214,5 +223,7 @@ def pipeline(domain, cfg: SearchConfig, rng) -> SearchResult:
     extras = {
         "mean_occupancy": st["occupancy"].mean() / PIPE_STAGES,
         "dup_per_tick": st["dup"],
+        "dup_within": st["dup_within"].sum(),
+        "dup_cross": st["dup_cross"].sum(),
     }
     return result_from_tree(tree, stats, extras)

@@ -103,6 +103,12 @@ class MCTSDecodeConfig:
     # (DESIGN.md §15): "loss" = classic virtual loss, "wu" = WU-UCT
     # unobserved counts (Q from completed playouts only).
     vl_mode: str = "loss"
+    # Within-level lane assignment for the depth-major Select paths
+    # (DESIGN.md §16): "independent" scores co-located lanes against an
+    # identical board; "running" threads the running-assignment scan through
+    # the batched level pass so same-parent lanes spread over distinct
+    # continuations of the token tree.
+    level_assign: str = "independent"
     # Arena capacity per slot for tree_reuse (0 -> 2*budget+2: one search's
     # worth of fresh allocations on top of a carried subtree).  The carry
     # must keep one capacity across tokens, so this is fixed per engine.
@@ -135,7 +141,7 @@ class MCTSDecodeConfig:
             # the carried arena splices into the next search unchanged
             max_nodes=self.resolved_arena_nodes if self.tree_reuse else 0,
             kernels=self.kernels, wave_select=self.wave_select,
-            vl_mode=self.vl_mode,
+            vl_mode=self.vl_mode, level_assign=self.level_assign,
             params=SearchParams(cp=self.cp, max_depth=self.search_depth,
                                 puct=True))
 

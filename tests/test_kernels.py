@@ -322,6 +322,83 @@ def test_uct_argmax_kernel_wu_all_masked_rows():
     assert bool((z1 == 0).all()) and bool((z2 == 0).all())
 
 
+# Running-assignment kernel (DESIGN.md §16): the fori_loop scan over rows
+# must agree with the jnp reference on the exact boards the lockstep Select
+# stage issues — duplicated parents, ragged/odd row counts (the 8-row pad
+# path), finished lanes interleaved with active ones, and sentinel ties.
+@pytest.mark.parametrize("vl_mode", ["loss", "wu"])
+@pytest.mark.parametrize("lanes,a", [(7, 4), (8, 4), (12, 8), (16, 130)])
+def test_uct_argmax_running_kernel_duplicated_parents(vl_mode, lanes, a):
+    from repro.kernels.uct_select import ops as uo
+    ks = jax.random.split(jax.random.key(18), 5)
+    gn = jax.random.randint(ks[0], (3, a), 0, 50).astype(jnp.float32)
+    gw = jax.random.normal(ks[1], (3, a)) * 3
+    gv = jax.random.randint(ks[2], (3, a), 0, 3).astype(jnp.float32)
+    go = jax.random.randint(ks[3], (3, a), 0, 4).astype(jnp.float32)
+    rows = (jnp.arange(lanes) % 3).astype(jnp.int32)
+    n, w, vl, o = gn[rows], gw[rows], gv[rows], go[rows]
+    pn = n.sum(-1) + vl.sum(-1) + o.sum(-1) + 1
+    valid = jax.random.bernoulli(ks[4], 0.7, (3, a)).at[:, 0].set(True)[rows]
+    kw = dict(cp=1.4, valid=valid, child_o=o, vl_mode=vl_mode)
+    a1 = uo.uct_argmax_running(n, w, vl, pn, rows, use_ref=True, **kw)
+    a2 = uo.uct_argmax_running(n, w, vl, pn, rows, interpret=True, **kw)
+    assert bool((a1 == a2).all())
+
+
+@pytest.mark.parametrize("vl_mode", ["loss", "wu"])
+def test_uct_argmax_running_kernel_skips_finished_lanes(vl_mode):
+    """Finished (all-invalid) lanes interleaved with active co-located ones:
+    they return 0 AND contribute nothing to later lanes' deltas — the active
+    lanes still take distinct unvisited children as if the wave were dense.
+    The entirely-finished wave returns all zeros on both paths."""
+    from repro.kernels.uct_select import ops as uo
+    lanes, a = 8, 6
+    z = jnp.zeros((lanes, a))
+    pn = jnp.ones((lanes,))
+    act = (jnp.arange(lanes) % 2) == 0            # lanes 1,3,5,7 finished
+    valid = jnp.broadcast_to(act[:, None], (lanes, a))
+    rows = jnp.zeros((lanes,), jnp.int32)         # one shared parent
+    kw = dict(cp=0.7, valid=valid, child_o=z, vl_mode=vl_mode)
+    a1 = uo.uct_argmax_running(z, z, z, pn, rows, use_ref=True, **kw)
+    a2 = uo.uct_argmax_running(z, z, z, pn, rows, interpret=True, **kw)
+    assert bool((a1 == a2).all())
+    out = np.asarray(a2)
+    assert (out[1::2] == 0).all()
+    # active lanes disperse over the unvisited children, skipping the holes
+    assert sorted(out[::2].tolist()) == [0, 1, 2, 3]
+    none = jnp.zeros((lanes, a), bool)
+    kw["valid"] = none
+    z1 = uo.uct_argmax_running(z, z, z, pn, rows, use_ref=True, **kw)
+    z2 = uo.uct_argmax_running(z, z, z, pn, rows, interpret=True, **kw)
+    assert bool((z1 == 0).all()) and bool((z2 == 0).all())
+
+
+@pytest.mark.parametrize("vl_mode", ["loss", "wu"])
+def test_uct_argmax_running_must_explore_sentinel_rotates(vl_mode):
+    """Sentinel ties under the running delta: the first lane of a co-located
+    pair takes the LOWEST-index idle unvisited child (first-max); its pick
+    raises that child's effective count past the 0.5 threshold, so the
+    second lane's sentinel moves to the OTHER unvisited child."""
+    from repro.kernels.uct_select import ops as uo
+    a = 5
+    unv = {0: (1, 3), 1: (0, 4)}                  # parent -> unvisited cols
+    gn = np.full((2, a), 7.0, np.float32)
+    for p, cols in unv.items():
+        gn[p, list(cols)] = 0.0
+    rows = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    n = jnp.asarray(gn)[rows]
+    w = jnp.asarray(np.random.default_rng(19).normal(size=(2, a)),
+                    jnp.float32)[rows]
+    z = jnp.zeros((4, a))
+    pn = n.sum(-1) + 1
+    valid = jnp.ones((4, a), bool)
+    kw = dict(cp=1.4, valid=valid, child_o=z, vl_mode=vl_mode)
+    a1 = uo.uct_argmax_running(n, w, z, pn, rows, use_ref=True, **kw)
+    a2 = uo.uct_argmax_running(n, w, z, pn, rows, interpret=True, **kw)
+    assert bool((a1 == a2).all())
+    assert np.asarray(a2).tolist() == [1, 3, 0, 4]
+
+
 # ---------------------------------------------------------------------------
 # flash backward (custom VJP) vs autodiff-through-sdpa
 # ---------------------------------------------------------------------------

@@ -1,0 +1,294 @@
+"""Within-level running assignment (``level_assign="running"``, DESIGN.md §16).
+
+The decorrelation ISSUE's acceptance bar, proven four ways:
+
+* lanes=1 bitwise parity — with a single lane the running delta is
+  identically zero, so running-lockstep (and running-mega) reproduce the
+  lane-major scan bit-for-bit for all five strategies, in both vl modes;
+* the three implementations agree — the jnp reference scan, the Pallas
+  ``uct_argmax_running`` kernel (interpret mode), and the megakernel's
+  fused per-level loop are bit-identical on the same level boards,
+  including duplicated-parent rows and ragged valid masks;
+* the knob threads end to end — SearchParams validation, SearchConfig
+  forwarding, and MCTSDecodeConfig reach the per-token search;
+* the behavior is real — at a co-located wave the running assignment
+  strictly reduces within-level duplicate selections on a fixed seed,
+  while the scan path (already decorrelated by construction) is a no-op.
+
+Post-run invariants (both in-flight planes drained) ride along.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stages as S
+from repro.core import uct
+from repro.core.domains.pgame import PGameDomain
+from repro.core.tree import check_consistency, init_tree
+from repro.kernels.search_wave import ops, ref
+from repro.kernels.uct_select import ops as uops
+from repro.search import SearchConfig, SearchParams, search
+
+DOM = PGameDomain(num_actions=4, game_depth=6, binary_reward=False, seed=3)
+ALL_METHODS = ("sequential", "root", "leaf", "tree", "pipeline")
+PLANES = ("visits", "value", "vloss", "unobs", "children", "parent",
+          "action", "prior", "terminal", "next_free", "free_top")
+
+
+def _assert_same_arena(ta, tb, msg=""):
+    for f in PLANES:
+        np.testing.assert_array_equal(np.asarray(getattr(ta, f)),
+                                      np.asarray(getattr(tb, f)),
+                                      err_msg=f"{msg}{f}")
+
+
+def _run(method, ws, lanes, seed=0, budget=64, vl_mode="wu",
+         la="running"):
+    sp = SearchParams(cp=0.7, max_depth=6, wave_select=ws, kernels="ref",
+                      vl_mode=vl_mode, level_assign=la)
+    cfg = SearchConfig(method=method, budget=budget, lanes=lanes, params=sp)
+    return jax.jit(lambda r: search(DOM, cfg, r))(jax.random.key(seed))
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.action_visits),
+                                  np.asarray(b.action_visits))
+    np.testing.assert_array_equal(np.asarray(a.action_value),
+                                  np.asarray(b.action_value))
+    if a.tree is not None and b.tree is not None:   # root keeps no tree
+        for k in ("visits", "value", "children", "vloss", "unobs"):
+            np.testing.assert_array_equal(np.asarray(getattr(a.tree, k)),
+                                          np.asarray(getattr(b.tree, k)),
+                                          err_msg=k)
+    for k in a.stats:
+        assert int(a.stats[k]) == int(b.stats[k]), k
+
+
+# ---------------------------------------------------------------------------
+# lanes=1: the running delta is identically zero -> bitwise == scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ALL_METHODS)
+@pytest.mark.parametrize("ws", ("lockstep", "mega"))
+def test_running_lanes1_bitwise_equals_scan(method, ws):
+    a = _run(method, "scan", 1, la="independent")
+    b = _run(method, ws, 1, la="running")
+    _assert_same_result(a, b)
+
+
+@pytest.mark.parametrize("method", ("tree", "pipeline"))
+@pytest.mark.parametrize("ws", ("lockstep", "mega"))
+def test_running_lanes1_bitwise_equals_scan_loss_mode(method, ws):
+    a = _run(method, "scan", 1, vl_mode="loss", la="independent")
+    b = _run(method, ws, 1, vl_mode="loss", la="running")
+    _assert_same_result(a, b)
+
+
+def test_scan_path_ignores_level_assign():
+    """The lane-major scan already sees earlier lanes' in-flight marks
+    through the plane itself, so the knob is a documented no-op there."""
+    for vl_mode in ("loss", "wu"):
+        a = _run("pipeline", "scan", 4, vl_mode=vl_mode, la="independent")
+        b = _run("pipeline", "scan", 4, vl_mode=vl_mode, la="running")
+        _assert_same_result(a, b)
+
+
+# ---------------------------------------------------------------------------
+# the three implementations agree on one level board
+# ---------------------------------------------------------------------------
+def _wave_board(seed, lanes, a, groups=3):
+    """A lockstep level board: ``groups`` distinct parents, lanes co-located
+    round-robin so every group repeats identical child-stat rows."""
+    ks = jax.random.split(jax.random.key(seed), 6)
+    gn = jax.random.randint(ks[0], (groups, a), 0, 50).astype(jnp.float32)
+    gw = jax.random.normal(ks[1], (groups, a)) * 3
+    gv = jax.random.randint(ks[2], (groups, a), 0, 3).astype(jnp.float32)
+    go = jax.random.randint(ks[3], (groups, a), 0, 4).astype(jnp.float32)
+    gva = jax.random.bernoulli(ks[4], 0.8, (groups, a)).at[:, 0].set(True)
+    rows = (jnp.arange(lanes) % groups).astype(jnp.int32)
+    n, w, vl, o, valid = gn[rows], gw[rows], gv[rows], go[rows], gva[rows]
+    pn = n.sum(-1) + vl.sum(-1) + o.sum(-1) + 1
+    return n, w, vl, o, pn, valid, rows
+
+
+@pytest.mark.parametrize("vl_mode", ("loss", "wu"))
+@pytest.mark.parametrize("lanes", (1, 4, 8, 16))
+def test_running_jnp_ref_equals_pallas_interpret(vl_mode, lanes):
+    n, w, vl, o, pn, valid, rows = _wave_board(21 + lanes, lanes, 5)
+    kw = dict(valid=valid, child_o=o, vl_mode=vl_mode)
+    a1 = uct.uct_argmax_running(n, w, vl, pn, rows, 1.1, **kw)
+    a2 = uops.uct_argmax_running(n, w, vl, pn, rows, cp=1.1,
+                                 interpret=True, **kw)
+    assert bool((a1 == a2).all())
+
+
+@pytest.mark.parametrize("vl_mode", ("loss", "wu"))
+def test_running_lanes1_equals_independent_argmax(vl_mode):
+    n, w, vl, o, pn, valid, rows = _wave_board(33, 1, 6)
+    kw = dict(valid=valid, child_o=o, vl_mode=vl_mode)
+    a = uct.uct_argmax(n, w, vl, pn, 1.4, **kw)
+    b = uct.uct_argmax_running(n, w, vl, pn, rows, 1.4, **kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_running_spreads_colocated_unvisited_siblings():
+    """The dispersion contract: co-located lanes at a parent with >= lanes
+    idle unvisited children take DISTINCT children (each pick knocks its
+    must-explore sentinel out for the rest of the wave), where the
+    independent assignment stacks every lane on one child."""
+    lanes, a = 4, 6
+    n = jnp.zeros((lanes, a))                      # all unvisited
+    w = jnp.zeros((lanes, a))
+    vl = jnp.zeros((lanes, a))
+    pn = jnp.ones((lanes,))
+    valid = jnp.ones((lanes, a), bool)
+    rows = jnp.zeros((lanes,), jnp.int32)          # one shared parent
+    for vl_mode in ("loss", "wu"):
+        kw = dict(valid=valid, child_o=vl, vl_mode=vl_mode)
+        ind = np.asarray(uct.uct_argmax(n, w, vl, pn, 0.7, **kw))
+        run = np.asarray(uct.uct_argmax_running(n, w, vl, pn, rows, 0.7,
+                                                **kw))
+        assert len(set(ind.tolist())) == 1          # stacked
+        assert len(set(run.tolist())) == lanes      # spread
+        pk = np.asarray(uops.uct_argmax_running(n, w, vl, pn, rows, cp=0.7,
+                                                interpret=True, **kw))
+        np.testing.assert_array_equal(pk, run)
+
+
+# ---------------------------------------------------------------------------
+# running megakernel (interpret) vs the ref fused wave, bit-for-bit
+# ---------------------------------------------------------------------------
+def _sp_run(vl_mode):
+    return S.SearchParams(cp=0.7, max_depth=6, kernels="ref",
+                          vl_mode=vl_mode, wave_select="lockstep",
+                          level_assign="running")
+
+
+def _scan_rounds(fn, lanes, rounds, seed, nodes=64):
+    tree0 = init_tree(DOM, nodes)
+    def body(tree, rng):
+        tree, sel = fn(tree, lanes, rng)
+        return tree, (sel["dup"].sum(), sel["dup_within"].sum(),
+                      sel["dup_cross"].sum())
+    rngs = jax.random.split(jax.random.key(seed), rounds)
+    return jax.lax.scan(body, tree0, rngs)
+
+
+@pytest.mark.parametrize("vl_mode", ("loss", "wu"))
+@pytest.mark.parametrize("lanes", (1, 4, 8))
+def test_running_pallas_interpret_round_bitwise_equals_ref(vl_mode, lanes):
+    sp = _sp_run(vl_mode)
+    ta, da = _scan_rounds(
+        lambda t, l, r: ref.tree_round(t, DOM, sp, l, jnp.asarray(True), r),
+        lanes, 6, 0)
+    tb, db = _scan_rounds(
+        lambda t, l, r: ops.tree_round(t, DOM, sp, l, jnp.asarray(True), r,
+                                       impl="pallas", interpret=True),
+        lanes, 6, 0)
+    _assert_same_arena(ta, tb)
+    for x, y in zip(da, db):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert bool((np.asarray(ta.vloss) == 0).all())
+    assert bool((np.asarray(ta.unobs) == 0).all())
+
+
+def _scan_ticks(fn, sp, lanes, ticks, seed, nodes=64):
+    tree = init_tree(DOM, nodes)
+    carry = (tree, S.empty_selection(sp, lanes),
+             S.empty_expansion(sp, lanes, DOM),
+             S.empty_playout(sp, lanes, DOM.num_actions))
+    def body(c, inp):
+        t, rng = inp
+        tree, se, ep, pb = c
+        tree, se, ep, pb = fn(tree, lanes, t < ticks - 3, se, ep, pb, rng)
+        return (tree, se, ep, pb), (se["dup"].sum(), se["dup_within"].sum(),
+                                    se["dup_cross"].sum())
+    rngs = jax.random.split(jax.random.key(seed), ticks)
+    (tree, *_), dups = jax.lax.scan(body, carry, (jnp.arange(ticks), rngs))
+    return tree, dups
+
+
+@pytest.mark.parametrize("vl_mode", ("loss", "wu"))
+@pytest.mark.parametrize("lanes", (1, 4, 8))
+def test_running_pallas_interpret_tick_bitwise_equals_ref(vl_mode, lanes):
+    sp = _sp_run(vl_mode)
+    ta, da = _scan_ticks(
+        lambda t, l, wv, se, ep, pb, r:
+            ref.pipeline_tick(t, DOM, sp, l, wv, se, ep, pb, r),
+        sp, lanes, 9, 1)
+    tb, db = _scan_ticks(
+        lambda t, l, wv, se, ep, pb, r:
+            ops.pipeline_tick(t, DOM, sp, l, wv, se, ep, pb, r,
+                              impl="pallas", interpret=True),
+        sp, lanes, 9, 1)
+    _assert_same_arena(ta, tb)
+    for x, y in zip(da, db):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert bool((np.asarray(ta.vloss) == 0).all())
+    assert bool((np.asarray(ta.unobs) == 0).all())
+
+
+# mega (fused ref round/tick) vs unfused lockstep at lanes > 1: the running
+# loop inside the megernel's Select phase must track the staged jnp path
+@pytest.mark.parametrize("method", ("tree", "pipeline"))
+@pytest.mark.parametrize("lanes", (4, 8))
+def test_running_mega_bitwise_equals_lockstep(method, lanes):
+    a = _run(method, "lockstep", lanes)
+    b = _run(method, "mega", lanes)
+    _assert_same_result(a, b)
+
+
+# ---------------------------------------------------------------------------
+# the behavior: fewer within-level duplicates on a fixed seed; planes drain
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ("tree", "pipeline"))
+@pytest.mark.parametrize("ws", ("lockstep", "mega"))
+def test_running_reduces_within_level_duplicates(method, ws):
+    ind = _run(method, ws, 8, budget=96, la="independent")
+    run = _run(method, ws, 8, budget=96, la="running")
+    assert int(run.extras["dup_within"]) < int(ind.extras["dup_within"])
+    # the headline stat is the UNION of the two flags (a lane can both share
+    # a leaf within the wave and land on a pre-wave in-flight leaf), so the
+    # split brackets it: max(parts) <= dup <= sum(parts)
+    for res in (ind, run):
+        dw, dc = int(res.extras["dup_within"]), int(res.extras["dup_cross"])
+        d = int(res.stats["duplicates"])
+        assert max(dw, dc) <= d <= dw + dc
+
+
+@pytest.mark.parametrize("method", ("tree", "pipeline"))
+@pytest.mark.parametrize("ws", ("lockstep", "mega"))
+@pytest.mark.parametrize("vl_mode", ("loss", "wu"))
+def test_running_drains_and_invariants(method, ws, vl_mode):
+    res = _run(method, ws, 4, budget=96, vl_mode=vl_mode)
+    c = check_consistency(res.tree)
+    assert bool(c["unobs_drained"]), c
+    assert bool(c["vloss_drained"]), c
+    assert bool(c["visit_flow"]), c
+    assert int(res.tree.visits[0]) == 96
+
+
+# ---------------------------------------------------------------------------
+# knob surface
+# ---------------------------------------------------------------------------
+def test_level_assign_validation_and_default():
+    assert SearchParams().level_assign == "independent"
+    assert not SearchParams().running
+    assert SearchParams(level_assign="running").running
+    with pytest.raises(ValueError, match="level_assign"):
+        SearchParams(level_assign="nope")
+
+
+def test_search_config_threads_level_assign():
+    assert SearchConfig(level_assign="running").params.running
+    # an explicit params knob wins over the config-level convenience knob
+    sp = SearchParams(level_assign="running")
+    assert SearchConfig(params=sp).params.running
+    assert not SearchConfig().params.running
+
+
+def test_mcts_decode_config_threads_level_assign():
+    from repro.serving.mcts_decode import MCTSDecodeConfig
+    cfg = MCTSDecodeConfig(level_assign="running")
+    assert cfg.search_config().params.running
+    assert not MCTSDecodeConfig().search_config().params.running

@@ -73,6 +73,65 @@ def test_uct_exploitation_dominates_at_cp0(seed):
     assert int(jnp.argmax(s)) == int(np.argmax(w / n))
 
 
+@given(seed=st.integers(0, 2**31 - 1),
+       lanes=st.integers(2, 8),
+       vl_mode=st.sampled_from(("loss", "wu")))
+def test_running_assignment_disperses_unvisited_siblings(seed, lanes, vl_mode):
+    """Whenever co-located lanes sit at a parent with >= lanes valid idle
+    unvisited children, the running assignment picks DISTINCT children: each
+    pick raises that child's effective count past the must-explore threshold
+    for every later lane of the wave, so the 1e30 sentinel moves on.  The
+    independent assignment stacks all of them on one child (the control)."""
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(lanes, 14))
+    n = jnp.zeros((lanes, a))
+    w = jnp.asarray(np.broadcast_to(rng.normal(size=a), (lanes, a)),
+                    jnp.float32)
+    z = jnp.zeros((lanes, a))
+    pn = jnp.ones((lanes,))
+    # a shared ragged mask with at least ``lanes`` valid columns
+    keep = rng.permutation(a)[:int(rng.integers(lanes, a + 1))]
+    valid = jnp.zeros((a,), bool).at[jnp.asarray(keep)].set(True)
+    valid = jnp.broadcast_to(valid, (lanes, a))
+    rows = jnp.zeros((lanes,), jnp.int32)          # all lanes co-located
+    kw = dict(valid=valid, child_o=z, vl_mode=vl_mode)
+    ind = np.asarray(uct.uct_argmax(n, w, z, pn, 0.9, **kw))
+    run = np.asarray(uct.uct_argmax_running(n, w, z, pn, rows, 0.9, **kw))
+    assert len(set(ind.tolist())) == 1
+    assert len(set(run.tolist())) == lanes
+    assert np.asarray(valid)[np.arange(lanes), run].all()
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       lanes=st.integers(2, 10),
+       groups=st.integers(1, 4),
+       vl_mode=st.sampled_from(("loss", "wu")))
+def test_running_never_adds_within_level_duplicates(seed, lanes, groups,
+                                                    vl_mode):
+    """On any single level board, running duplicates <= independent
+    duplicates: independent gives every co-located group exactly one pick
+    (identical rows, identical argmax -> size-1 dups per group); running can
+    only split a group across more children, never fewer."""
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(2, 10))
+    gn = rng.integers(0, 20, (groups, a)).astype(np.float32)
+    gw = (rng.normal(size=(groups, a)) * 3).astype(np.float32)
+    gv = rng.integers(0, 3, (groups, a)).astype(np.float32)
+    gva = rng.random((groups, a)) < 0.8
+    gva[:, 0] = True
+    rows = jnp.asarray(rng.integers(0, groups, lanes), jnp.int32)
+    n, w = jnp.asarray(gn)[rows], jnp.asarray(gw)[rows]
+    vl, valid = jnp.asarray(gv)[rows], jnp.asarray(gva)[rows]
+    pn = n.sum(-1) + vl.sum(-1) + 1
+    kw = dict(valid=valid, child_o=vl, vl_mode=vl_mode)
+    ind = np.asarray(uct.uct_argmax(n, w, vl, pn, 1.1, **kw))
+    run = np.asarray(uct.uct_argmax_running(n, w, vl, pn, rows, 1.1, **kw))
+    r = np.asarray(rows)
+    dups = lambda pick: lanes - len({(int(g), int(p))
+                                     for g, p in zip(r, pick)})
+    assert dups(run) <= dups(ind)
+
+
 @given(st.integers(0, 2**31 - 1))
 def test_virtual_loss_discourages_inflight(seed):
     rng = np.random.default_rng(seed)
@@ -106,11 +165,12 @@ def _drain_domain():
 @given(method=st.sampled_from(("tree", "pipeline")),
        ws=st.sampled_from(("scan", "lockstep", "mega")),
        vl_mode=st.sampled_from(("loss", "wu")),
+       level_assign=st.sampled_from(("independent", "running")),
        lanes=st.sampled_from((1, 3, 4)),
        budget=st.sampled_from((9, 24)),
        seed=st.integers(0, 2**16))
 def test_inflight_planes_drain_after_completed_rounds(
-        method, ws, vl_mode, lanes, budget, seed):
+        method, ws, vl_mode, level_assign, lanes, budget, seed):
     """Whatever the strategy, Select order, in-flight mode, wave width, and
     budget (including masked drain ticks and lane-rounded budgets), every
     initiated playout is eventually backed up: both the ``vloss`` and the
@@ -120,7 +180,7 @@ def test_inflight_planes_drain_after_completed_rounds(
     from repro.search import SearchConfig, SearchParams, search
     dom = _drain_domain()
     sp = SearchParams(cp=0.9, max_depth=5, kernels="ref", wave_select=ws,
-                      vl_mode=vl_mode)
+                      vl_mode=vl_mode, level_assign=level_assign)
     cfg = SearchConfig(method=method, budget=budget, lanes=lanes, params=sp)
     res = jax.jit(lambda r: search(dom, cfg, r))(jax.random.key(seed))
     assert bool((res.tree.vloss == 0).all()), (method, ws, vl_mode)
